@@ -1,0 +1,71 @@
+"""Shared benchmark scaffolding: the experimental setup of the paper
+(Sec IV) at CPU-tractable scale, plus CSV emission helpers.
+
+Scale note (EXPERIMENTS.md §Paper-validation): CIFAR-10/ResNet-18 × 100
+rounds is ~10⁴ CPU-core-minutes; the benches run the same federation
+(12 clients, Dirichlet α=0.1, 50% participation, FedProx μ=0.1) with the
+synthetic class-conditional dataset and a narrow ResNet at N rounds, which
+preserves the phenomena the paper measures (selection dynamics, stability
+drop ordering, μ-synergy) while fitting the harness budget. --full raises
+the scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import get_config, smoke_variant
+from repro.core.scoring import HeteRoScoreConfig
+from repro.core.selection import SelectorConfig
+from repro.data import make_vision_data
+from repro.fed import run_federated
+from repro.models import build_model
+
+
+def bench_fed_config(quick: bool = True, **over) -> FedConfig:
+    base = dict(
+        num_clients=10, participation=0.5,
+        rounds=30 if quick else 80,
+        local_epochs=2, local_batch=16,
+        lr=0.3, mu=0.1, dirichlet_alpha=0.1, seed=0,
+    )
+    base.update(over)
+    return FedConfig(**base)
+
+
+def bench_model():
+    cfg = dataclasses.replace(smoke_variant(get_config("resnet18-cifar10")), d_model=8)
+    return build_model(cfg)
+
+
+def bench_data(fed: FedConfig, *, noise: float = 0.4, seed: Optional[int] = None):
+    return make_vision_data(fed, train_per_class=48, test_per_class=16,
+                            noise=noise, seed=seed)
+
+
+def run_method(model, fed, data, selector: str, *,
+               score_cfg: Optional[HeteRoScoreConfig] = None,
+               sel_cfg: Optional[SelectorConfig] = None,
+               steps_per_round: int = 4):
+    t0 = time.time()
+    res = run_federated(
+        model, fed, data, selector=selector,
+        score_cfg=score_cfg,
+        sel_cfg=sel_cfg or SelectorConfig(num_selected=fed.num_selected),
+        steps_per_round=steps_per_round,
+    )
+    dt = time.time() - t0
+    us_per_round = dt / fed.rounds * 1e6
+    return res, us_per_round
+
+
+def emit(name: str, us_per_call: float, derived: Dict[str, float]) -> None:
+    """Brief-mandated CSV: name,us_per_call,derived."""
+    dstr = ";".join(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{dstr}", flush=True)

@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: per-call latency of the paper-relevant fused
+scoring kernel (interpret mode on CPU) vs the jnp reference, plus the model
+blockwise-attention and SSD jnp hot paths the TPU kernels mirror."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import HeteRoScoreConfig
+from repro.core.selection import SelectorConfig, dynamic_temperature
+from repro.core.state import init_client_state, update_client_state
+from repro.kernels import ops, ref
+from repro.models.attention import blockwise_attention
+
+from benchmarks.common import emit
+
+
+def timeit(fn, *args, n=20, **kw):
+    fn(*args, **kw)  # compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.tree_util.tree_map(lambda x: x.block_until_ready(), out)
+    return (time.time() - t0) / n * 1e6
+
+
+def main(quick: bool = True) -> dict:
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    # fused scoring: K = 4096 clients
+    k = 4096
+    rng = np.random.default_rng(0)
+    s = init_client_state(k, jnp.asarray(rng.uniform(0, 0.69, k), jnp.float32))
+    s = update_client_state(s, round_idx=jnp.int32(0),
+                            selected_mask=jnp.asarray(rng.uniform(size=k) > 0.5),
+                            observed_loss=jnp.asarray(rng.uniform(0.1, 3, k), jnp.float32),
+                            observed_sqnorm=jnp.asarray(rng.uniform(0, 1, k), jnp.float32))
+    cfg = HeteRoScoreConfig()
+    tau = dynamic_temperature(jnp.int32(3), SelectorConfig())
+    us_ref = timeit(jax.jit(lambda: ref.score_probs_reference(s, jnp.int32(3), tau, cfg)[0]))
+    emit("kernel/score_jnp_ref_K4096", us_ref, {"K": k})
+    out["score_ref"] = us_ref
+
+    # attention jnp blockwise path (what the TPU flash kernel replaces)
+    q = jax.random.normal(key, (4, 512, 8, 64), jnp.bfloat16)
+    kk = jax.random.normal(key, (4, 512, 8, 64), jnp.bfloat16)
+    vv = jax.random.normal(key, (4, 512, 8, 64), jnp.bfloat16)
+    us_attn = timeit(jax.jit(lambda a, b, c: blockwise_attention(a, b, c, causal=True)),
+                     q, kk, vv, n=5)
+    emit("kernel/blockwise_attn_jnp_b4s512", us_attn, {"tokens": 4 * 512})
+    out["attn"] = us_attn
+
+    # SSD jnp chunked path
+    from repro.models.mamba2 import _ssd_chunked
+    x = jax.random.normal(key, (2, 1024, 8, 64))
+    dt = jax.nn.softplus(jax.random.normal(key, (2, 1024, 8)))
+    a_neg = -jnp.exp(jax.random.normal(key, (8,)) * 0.3)
+    b_in = jax.random.normal(key, (2, 1024, 64)) * 0.5
+    c_in = jax.random.normal(key, (2, 1024, 64)) * 0.5
+    us_ssd = timeit(jax.jit(lambda *a: _ssd_chunked(*a, 256)[0]), x, dt, a_neg, b_in, c_in, n=5)
+    emit("kernel/ssd_chunked_jnp_s1024", us_ssd, {"tokens": 2 * 1024})
+    out["ssd"] = us_ssd
+    return out
+
+
+if __name__ == "__main__":
+    main()

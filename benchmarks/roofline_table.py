@@ -1,0 +1,58 @@
+"""Roofline table (brief deliverable g): render the dry-run records into the
+per-(arch x shape) three-term table + bottleneck + useful-FLOPs ratio."""
+
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(mesh: str) -> dict:
+    path = os.path.join(HERE, "results", f"dryrun_{mesh}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def render(mesh: str = "singlepod") -> str:
+    res = load(mesh)
+    lines = [
+        f"| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bottleneck | useful | GB/chip | note |",
+        f"|---|---|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(res):
+        v = res[key]
+        arch, shape = key.split("|")
+        if v["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | SKIP (encoder-only) | — | — | {v['reason']} |")
+            continue
+        if v["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | — | — | — | ERROR | — | — | {v['error'][:40]} |")
+            continue
+        r = v["roofline"]
+        gb = v["memory"]["per_chip_total_bytes"] / (1 << 30)
+        lines.append(
+            f"| {arch} | {shape} | {r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} "
+            f"| {r['t_collective_s']*1e3:.2f} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.2f} | {gb:.2f} | {v.get('note','')} |"
+        )
+    return "\n".join(lines)
+
+
+def main(quick: bool = True) -> dict:
+    for mesh in ("singlepod", "multipod"):
+        try:
+            res = load(mesh)
+        except FileNotFoundError:
+            print(f"roofline/{mesh},0.0,missing=1")
+            continue
+        ok = sum(1 for v in res.values() if v["status"] == "ok")
+        print(f"roofline/{mesh},0.0,ok={ok};total={len(res)}")
+    return {}
+
+
+if __name__ == "__main__":
+    print(render("singlepod"))
+    print()
+    print(render("multipod"))

@@ -1,0 +1,42 @@
+"""Benchmark driver — one function per paper table (brief deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV per benchmark. ``--full`` raises the
+federation scale (more rounds); default sizes fit the CPU harness budget.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table3,table4,kernels,roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (kernel_bench, roofline_table, table1_selection,
+                            table2_participation, table3_ablation,
+                            table4_crossdataset)
+
+    print("name,us_per_call,derived")
+    jobs = [
+        ("kernels", kernel_bench.main),
+        ("roofline", roofline_table.main),
+        ("table1", table1_selection.main),
+        ("table2", table2_participation.main),
+        ("table3", table3_ablation.main),
+        ("table4", table4_crossdataset.main),
+    ]
+    for name, fn in jobs:
+        if only and name not in only:
+            continue
+        fn(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

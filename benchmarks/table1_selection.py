@@ -1,0 +1,25 @@
+"""Paper Table I: selection methods × (peak/final/stable acc, stability drop)
++ Figs 5/6 (selection counts / concentration std)."""
+
+from __future__ import annotations
+
+from benchmarks.common import bench_data, bench_fed_config, bench_model, emit, run_method
+
+METHODS = ("heterosel", "heterosel_mult", "oort", "power_of_choice", "random")
+
+
+def main(quick: bool = True) -> dict:
+    fed = bench_fed_config(quick)
+    data = bench_data(fed)
+    model = bench_model()
+    out = {}
+    for m in METHODS:
+        res, us = run_method(model, fed, data, m)
+        s = res.summary()
+        out[m] = s
+        emit(f"table1/{m}", us, s)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Table II: 100% participation baselines (FedAvg, FedProx) vs
+HeteRo-Select at 50% participation."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import bench_data, bench_fed_config, bench_model, emit, run_method
+
+
+def main(quick: bool = True) -> dict:
+    model = bench_model()
+    out = {}
+    rows = [
+        # (name, participation, mu, selector)
+        ("fedavg_100", 1.0, 0.0, "random"),
+        ("fedprox_100", 1.0, 0.1, "random"),
+        ("heterosel_50", 0.5, 0.1, "heterosel"),
+    ]
+    for name, part, mu, sel in rows:
+        fed = bench_fed_config(quick, participation=part, mu=mu)
+        data = bench_data(fed)
+        res, us = run_method(model, fed, data, sel)
+        out[name] = res.summary()
+        emit(f"table2/{name}", us, res.summary())
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper Table III: gamma/eta/temperature ablations + the mu x strategy synergy
+(the paper's central claim: strong mu unlocks explorative selection)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.scoring import HeteRoScoreConfig
+from repro.core.selection import SelectorConfig
+
+from benchmarks.common import bench_data, bench_fed_config, bench_model, emit, run_method
+
+
+def main(quick: bool = True) -> dict:
+    model = bench_model()
+    out = {}
+
+    def run(name, *, gamma=0.7, eta=0.3, tau0=1.0, mu=0.01):
+        fed = bench_fed_config(quick, mu=mu, rounds=(24 if quick else 50))
+        data = bench_data(fed)
+        score = HeteRoScoreConfig(gamma=gamma, eta=eta)
+        sel = SelectorConfig(num_selected=fed.num_selected, tau0=tau0)
+        res, us = run_method(model, fed, data, "heterosel",
+                             score_cfg=score, sel_cfg=sel)
+        out[name] = res.summary()
+        emit(f"table3/{name}", us, res.summary())
+
+    for g in (0.0, 0.3, 0.7, 1.0):
+        run(f"gamma={g}", gamma=g)
+    for e in (0.0, 0.3, 0.7, 1.0):
+        run(f"eta={e}", eta=e)
+    for t in (0.1, 0.5, 1.0, 2.0):
+        run(f"tau0={t}", tau0=t)
+    # mu x strategy synergy (Table III final block)
+    for mu in (0.01, 0.1):
+        run(f"explorative_mu={mu}", gamma=0.7, eta=0.3, tau0=2.0, mu=mu)
+        run(f"exploitative_mu={mu}", gamma=0.05, eta=0.1, tau0=2.0, mu=mu)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""End-to-end driver (deliverable b): the paper's Table I experiment —
+five selection policies on the same non-IID federation, several hundred
+local steps total, with the full metric set + selection-fairness analysis
+(Figs 5/6).
+
+    PYTHONPATH=src python examples/paper_reproduction.py [--rounds 40]
+"""
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import get_config, smoke_variant
+from repro.data import make_vision_data
+from repro.fed import run_federated
+from repro.models import build_model
+
+METHODS = ["heterosel", "heterosel_mult", "oort", "power_of_choice", "random"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40)
+    args = ap.parse_args()
+
+    fed = FedConfig(num_clients=12, participation=0.5, rounds=args.rounds,
+                    local_epochs=2, local_batch=16, lr=0.3, mu=0.1,
+                    dirichlet_alpha=0.1, seed=0)
+    data = make_vision_data(fed, train_per_class=64, test_per_class=16, noise=0.4)
+    model = build_model(dataclasses.replace(
+        smoke_variant(get_config("resnet18-cifar10")), d_model=8))
+
+    print("label JS divergence per client:", np.round(data.label_js, 3))
+    rows = {}
+    for m in METHODS:
+        res = run_federated(model, fed, data, selector=m, steps_per_round=4)
+        rows[m] = res
+        s = res.summary()
+        print(f"{m:18s} peak={s['peak_acc']:.3f} final={s['final_acc']:.3f} "
+              f"stable={s['stable_acc']:.3f} drop={s['stability_drop']:.3f} "
+              f"sel_std={s['selection_std']:.2f}")
+
+    print("\nTable-I orderings (paper's qualitative claims):")
+    print("  stability drop:",
+          sorted(METHODS, key=lambda m: rows[m].stability_drop))
+    print("  selection-count std (Fig 6):",
+          {m: round(rows[m].selection_std, 2) for m in METHODS})
+
+
+if __name__ == "__main__":
+    main()

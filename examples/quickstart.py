@@ -1,0 +1,46 @@
+"""Quickstart: HeteRo-Select federated training in ~40 lines.
+
+Runs the paper's Algorithm 1 on a synthetic non-IID image federation
+(12 clients, Dirichlet α=0.1, 50% participation, FedProx μ=0.1) and prints
+the paper's metrics: peak / final / stable accuracy + stability drop.
+
+    PYTHONPATH=src python examples/quickstart.py [--rounds 20]
+"""
+
+import argparse
+import dataclasses
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import get_config, smoke_variant
+from repro.data import make_vision_data
+from repro.fed import run_federated
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=15)
+    ap.add_argument("--selector", default="heterosel",
+                    choices=["heterosel", "heterosel_mult", "oort",
+                             "power_of_choice", "random"])
+    args = ap.parse_args()
+
+    fed = FedConfig(num_clients=12, participation=0.5, rounds=args.rounds,
+                    local_epochs=2, local_batch=16, lr=0.3, mu=0.1,
+                    dirichlet_alpha=0.1, seed=0)
+    data = make_vision_data(fed, train_per_class=48, test_per_class=16, noise=0.3)
+    model = build_model(dataclasses.replace(
+        smoke_variant(get_config("resnet18-cifar10")), d_model=8))
+
+    print(f"selector={args.selector}  clients={fed.num_clients}  "
+          f"m={fed.num_selected}/round  mu={fed.mu}")
+    res = run_federated(model, fed, data, selector=args.selector,
+                        steps_per_round=4, verbose=True)
+    print("\n== paper metrics ==")
+    for k, v in res.summary().items():
+        print(f"  {k:16s} {v:.4f}")
+    print(f"  selection counts: {res.selection_counts.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

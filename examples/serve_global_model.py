@@ -1,0 +1,54 @@
+"""Serve the federated global model: batched autoregressive decoding with a
+KV cache — the serve_step the decode_* dry-run shapes lower at scale.
+
+    PYTHONPATH=src python examples/serve_global_model.py [--tokens 16]
+"""
+
+import argparse
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, smoke_variant
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--arch", default="yi-9b")
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    b = args.batch
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (b, 4), 0, cfg.vocab_size)
+    cache = model.init_cache(b, 4 + args.tokens)
+    step = jax.jit(model.decode_step)
+
+    # prefill via teacher-forced decode (tiny prompt)
+    tok = prompt[:, :1]
+    for pos in range(prompt.shape[1]):
+        logits, cache = step(params, cache, prompt[:, pos:pos + 1], jnp.int32(pos))
+    out = []
+    key = jax.random.PRNGKey(2)
+    for t in range(args.tokens):
+        key, sk = jax.random.split(key)
+        nxt = jax.random.categorical(
+            sk, logits[:, 0, :cfg.vocab_size].astype(jnp.float32))
+        out.append(np.asarray(nxt))
+        logits, cache = step(params, cache, nxt[:, None].astype(jnp.int32),
+                             jnp.int32(prompt.shape[1] + t))
+    gen = np.stack(out, axis=1)
+    print(f"arch={cfg.name} (reduced)  batch={b}")
+    print("prompt:\n", np.asarray(prompt))
+    print("generated token ids:\n", gen)
+
+
+if __name__ == "__main__":
+    main()

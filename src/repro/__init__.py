@@ -1,0 +1,53 @@
+"""repro — production-grade JAX reproduction of HeteRo-Select.
+
+Stabilizing Federated Learning under Extreme Heterogeneity with HeteRo-Select
+(Masud, Jahin, Hasan — CS.LG 2025).
+
+Public API re-exports the pieces a user composes:
+
+    from repro import (
+        ClientState, compute_scores, select_clients,
+        make_selector, fedprox_local_train, fedavg,
+    )
+"""
+
+from repro.core.state import ClientState, init_client_state
+from repro.core.scoring import (
+    HeteRoScoreConfig,
+    compute_score_components,
+    combine_additive,
+    combine_multiplicative,
+    compute_scores,
+)
+from repro.core.selection import (
+    SelectorConfig,
+    dynamic_temperature,
+    selection_probabilities,
+    sample_clients,
+    make_selector,
+)
+from repro.core.theory import (
+    exploration_lower_bound,
+    fedprox_drift_bound,
+    optimal_mu,
+)
+
+__version__ = "1.0.0"
+
+__all__ = [
+    "ClientState",
+    "init_client_state",
+    "HeteRoScoreConfig",
+    "compute_score_components",
+    "combine_additive",
+    "combine_multiplicative",
+    "compute_scores",
+    "SelectorConfig",
+    "dynamic_temperature",
+    "selection_probabilities",
+    "sample_clients",
+    "make_selector",
+    "exploration_lower_bound",
+    "fedprox_drift_bound",
+    "optimal_mu",
+]

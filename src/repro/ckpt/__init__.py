@@ -1,0 +1,5 @@
+"""Checkpointing: flattened-keypath npz save/restore (host-local shards)."""
+
+from repro.ckpt.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]

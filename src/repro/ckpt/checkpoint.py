@@ -1,0 +1,70 @@
+"""Minimal sharded checkpointing without external deps.
+
+Parameters are flattened to keypath→array and written as one ``.npz`` per
+host (process-local shards via ``jax.experimental.multihost_utils`` would
+slot in here on a real fleet; on a single host this is the whole tree).
+A ``meta.json`` records step, round and client-state so federated runs
+resume mid-training.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params: Any, *, step: int = 0,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    os.makedirs(path, exist_ok=True)
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    np.savez(fname, **_flatten(params))
+    meta = {"step": step, **(extra or {})}
+    with open(os.path.join(path, f"meta_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    return fname
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(path)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, like: Any, step: Optional[int] = None
+                       ) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (same keypaths required)."""
+    step = latest_step(path) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint under {path}")
+    data = np.load(os.path.join(path, f"ckpt_{step:08d}.npz"))
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    restored = []
+    for path_k, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        arr = data[key]
+        restored.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    with open(os.path.join(path, f"meta_{step:08d}.json")) as f:
+        meta = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, restored), meta

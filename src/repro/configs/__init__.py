@@ -1,0 +1,1 @@
+"""Configs: assigned architectures, input shapes, federated settings."""

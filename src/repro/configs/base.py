@@ -1,0 +1,152 @@
+"""Config dataclasses: model architecture, input shapes, federated setup.
+
+Plain frozen dataclasses (not pytrees) — configs are static metadata that
+select code paths; arrays never live here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+VOCAB_PAD = 256  # pad vocab to a multiple of this for model-axis sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One architecture. ``family`` selects the model-zoo implementation.
+
+    family ∈ {dense, moe, ssm, hybrid, encoder, vlm, resnet}.
+    """
+
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    citation: str = ""
+    # attention details
+    head_dim: int = 0                 # 0 ⇒ d_model // num_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0           # 0 ⇒ full attention
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 2.0
+    # 'gather': all experts f-sliced on every chip, FSDP all-gather per layer
+    # 'a2a':    experts sharded over 'data', token all-to-all dispatch (§Perf)
+    moe_impl: str = "gather" 
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 256
+    # hybrid (zamba2): one shared attention block applied every N layers
+    shared_attn_every: int = 0
+    # vlm: cross-attention layer period & vision stub
+    cross_attn_every: int = 0
+    vision_tokens: int = 1601         # (1 tile × 40×40 patches + cls) stub
+    # encoder-only (hubert): masked-prediction frontend stub
+    is_encoder: bool = False
+    # norm & misc
+    remat: bool = True                # per-layer activation checkpointing
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # vision classification (resnet)
+    image_size: int = 32
+    num_classes: int = 10
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        return int(math.ceil(self.vocab_size / VOCAB_PAD) * VOCAB_PAD)
+
+    @property
+    def d_inner(self) -> int:  # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (used for 6·N·D model-FLOPs)."""
+        d, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        if self.family == "resnet":
+            return 11_000_000
+        emb = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
+        if self.family == "ssm":
+            per_layer = self._mamba_block_params()
+            return emb + L * per_layer
+        if self.family == "hybrid":
+            n_attn_apps = L // max(self.shared_attn_every, 1)
+            mamba_layers = L - n_attn_apps
+            shared = attn + 3 * d * self.d_ff  # one shared block's weights
+            return emb + mamba_layers * self._mamba_block_params() + shared
+        mlp = 3 * d * self.d_ff
+        if self.family == "moe":
+            mlp = self.num_experts * 3 * d * self.d_ff + d * self.num_experts
+        per_layer = attn + mlp
+        if self.family == "vlm" and self.cross_attn_every:
+            # cross-attn layers replace self-attn (same cost) + gate
+            per_layer += 0
+        return emb + L * per_layer
+
+    def active_param_count(self) -> int:
+        """N_active for MoE (top-k experts only) — else == param_count."""
+        if self.family != "moe":
+            return self.param_count()
+        d, L = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        emb = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) + self.num_heads * hd * d
+        mlp = self.num_experts_per_tok * 3 * d * self.d_ff + d * self.num_experts
+        return emb + L * (attn + mlp)
+
+    def _mamba_block_params(self) -> int:
+        d, di, ns = self.d_model, self.d_inner, self.ssm_state
+        nh = self.ssm_heads
+        in_proj = d * (2 * di + 2 * ns + nh)
+        out_proj = di * d
+        conv = 4 * (di + 2 * ns)
+        return in_proj + out_proj + conv + 2 * nh
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input shape."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """Federated-learning control-plane configuration (paper Sec IV)."""
+
+    num_clients: int = 12
+    participation: float = 0.5
+    rounds: int = 100
+    local_epochs: int = 5
+    local_batch: int = 32
+    lr: float = 0.01
+    mu: float = 0.1                 # FedProx proximal coefficient
+    selector: str = "heterosel"
+    dirichlet_alpha: float = 0.1
+    seed: int = 0
+
+    @property
+    def num_selected(self) -> int:
+        return max(int(round(self.participation * self.num_clients)), 1)

@@ -1,0 +1,13 @@
+"""Grok-1 (314B) — MoE, 8 experts top-2 [hf:xai-org/grok-1]."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe", num_layers=64, d_model=6144,
+    num_heads=48, num_kv_heads=8, d_ff=32768, vocab_size=131072,
+    num_experts=8, num_experts_per_tok=2,
+    # a2a EP needs experts % |data|=16 == 0; with 8 experts the gather impl
+    # (f-sliced experts on every chip) is the right layout — see DESIGN.md.
+    moe_impl="gather",
+    citation="hf:xai-org/grok-1",
+)

@@ -1,0 +1,15 @@
+"""HuBERT-XLarge — encoder-only audio transformer [arXiv:2106.07447].
+
+Conv/mel frontend is a STUB per the brief: input_specs() supplies frame
+embeddings. Training objective: masked prediction over vocab=504 cluster
+targets. Encoder-only ⇒ decode shapes are skipped (DESIGN.md §4).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="encoder", num_layers=48, d_model=1280,
+    num_heads=16, num_kv_heads=16, d_ff=5120, vocab_size=504,
+    is_encoder=True,
+    citation="arXiv:2106.07447 (HuBERT)",
+)

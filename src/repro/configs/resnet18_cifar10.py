@@ -1,0 +1,13 @@
+"""ResNet-18 on CIFAR-10 — the paper's own experimental setup (Sec IV).
+
+GroupNorm replaces BatchNorm (standard non-IID FL practice; DESIGN.md §2).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="resnet18-cifar10", family="resnet", num_layers=18, d_model=64,
+    num_heads=0, num_kv_heads=0, d_ff=0, vocab_size=0,
+    image_size=32, num_classes=10,
+    citation="HeteRo-Select paper Sec IV (CIFAR-10, ResNet-18)",
+)

@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — HeteRo-Select scoring, selection, theory."""
+
+from repro.core.state import ClientState, init_client_state, update_client_state
+from repro.core.scoring import HeteRoScoreConfig, compute_scores
+from repro.core.selection import SelectorConfig, make_selector, SELECTORS
+
+__all__ = [
+    "ClientState",
+    "init_client_state",
+    "update_client_state",
+    "HeteRoScoreConfig",
+    "compute_scores",
+    "SelectorConfig",
+    "make_selector",
+    "SELECTORS",
+]

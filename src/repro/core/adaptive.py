@@ -1,0 +1,70 @@
+"""Adaptive μ controller — the paper's declared future work
+("developing adaptive hyperparameter tuning mechanisms", Sec VI),
+instantiated from its own Lemma A.4:
+
+    μ* = E·η_l·(G² + B_sel²) / ||w_0 − w*||².
+
+All three quantities on the right are observable during training:
+  * G²      ← running mean of client gradient-norm² (we reuse the update
+              sqnorm metadata the server already tracks for N_k(t), scaled
+              by 1/(E·η_l)² — an SGD update is ≈ E·η_l·ḡ),
+  * B_sel²  ← dispersion of selected-client updates around their mean,
+  * ||w−w*||² ← proxied by the global update norm trend (distance-to-go
+              shrinks as updates shrink; we use an EMA of round-update
+              norms times remaining rounds).
+
+The controller clips μ to [μ_min, μ_max] and moves by at most ×2 per round
+— regularization schedules must be slow relative to the selection dynamics
+they stabilize.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class AdaptiveMu:
+    local_steps: int
+    local_lr: float
+    mu: float = 0.1
+    mu_min: float = 0.01
+    mu_max: float = 1.0
+    ema: float = 0.8
+    _g_sq: Optional[float] = None
+    _b_sq: Optional[float] = None
+    _dist_sq: Optional[float] = None
+
+    def observe_round(self, update_sqnorms: np.ndarray,
+                      rounds_remaining: int) -> float:
+        """Update estimates from the selected clients' ||Δw_k||² and return μ.
+
+        Δw_k ≈ −E·η_l·ḡ_k  ⇒  ||ḡ_k||² ≈ ||Δw_k||² / (E·η_l)².
+        """
+        sq = np.asarray(update_sqnorms, dtype=np.float64)
+        sq = sq[sq > 0]
+        if len(sq) == 0:
+            return self.mu
+        scale = (self.local_steps * self.local_lr) ** 2
+        g_sq = float(sq.mean() / scale)
+        # dispersion of updates ≈ (E·η_l)²·B_sel² (Thm III.2's b_k² proxy)
+        b_sq = float(sq.std() / scale) if len(sq) > 1 else 0.0
+        # distance-to-go proxy: mean per-round movement × remaining rounds
+        dist_sq = float(sq.mean()) * max(rounds_remaining, 1)
+
+        def mix(old, new):
+            return new if old is None else self.ema * old + (1 - self.ema) * new
+
+        self._g_sq = mix(self._g_sq, g_sq)
+        self._b_sq = mix(self._b_sq, b_sq)
+        self._dist_sq = mix(self._dist_sq, dist_sq)
+
+        mu_star = (self.local_steps * self.local_lr
+                   * (self._g_sq + self._b_sq) / max(self._dist_sq, 1e-12))
+        # slow, clipped move toward μ*
+        target = float(np.clip(mu_star, self.mu_min, self.mu_max))
+        self.mu = float(np.clip(target, self.mu / 2, self.mu * 2))
+        return self.mu

@@ -1,0 +1,194 @@
+"""HeteRo-Select multi-phase scoring — paper Sec III-B, Eqs (1)–(11).
+
+All components are computed as vectorized ``(K,)`` arrays from
+:class:`repro.core.state.ClientState`. The additive combination (Eq 1) is
+the champion configuration; the multiplicative variant (Eq 2) is kept for
+the Table-III ablation.
+
+Component ranges (paper):
+  V'  ∈ [0, 1]    normalized information value (Eq 3)
+  D   ∈ [0, 2·JS] diversity, decaying weight (Eq 4); JS ∈ [0, log 2]
+  M   ∈ [-0.5, 1.5] sigmoid momentum (Eq 5)
+  F   ∈ (0, 1],  F'  = F - 1 ∈ (-1, 0]   fairness (Eqs 6, 8)
+  St  ∈ [1, ∞),  St' = St - 1 ≥ 0        staleness (Eqs 7, 9)
+  N   ∈ [1-α, 1], N' = N - 1 ∈ [-α, 0]   update-norm penalty (Eqs 10, 11)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import ClientState, staleness as _staleness
+
+EPS = 1e-8
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HeteRoScoreConfig:
+    """Weights/hyper-parameters of the scoring function.
+
+    Defaults are the paper's champion configuration (Sec III-B: all six
+    weights 1.0; η, γ from the ablation winners γ=0.7, η=0.3; α norm-penalty
+    weight 0.5; T_max = 20).
+    """
+
+    w_value: float = 1.0
+    w_diversity: float = 1.0
+    w_momentum: float = 1.0
+    w_fairness: float = 1.0
+    w_staleness: float = 1.0
+    w_norm: float = 1.0
+    eta: float = 0.3        # fairness weight η (Eq 6)
+    gamma: float = 0.7      # staleness weight γ (Eq 7)
+    alpha: float = 0.5      # update-norm penalty weight α (Eq 11)
+    t_max: int = 20         # max staleness bonus window T_max
+    diversity_decay_rounds: int = 100  # the /100 in Eq 4 and τ(t)
+
+
+def information_value(state: ClientState) -> jax.Array:
+    """Eq (3): min-max normalized local loss over *available* clients.
+
+    Clients with no loss observation yet get the neutral value 0.5 — before
+    the first contact the server has no utility signal, and 0.5 avoids both
+    starving and over-selecting unknown clients.
+    """
+    losses = state.loss_prev
+    # Min/max over clients that have an observation; fall back to 0 range.
+    big = jnp.float32(1e30)
+    lmin = jnp.min(jnp.where(state.has_loss > 0, losses, big))
+    lmax = jnp.max(jnp.where(state.has_loss > 0, losses, -big))
+    denom = lmax - lmin + EPS
+    v = (losses - lmin) / denom
+    v = jnp.clip(v, 0.0, 1.0)
+    return jnp.where(state.has_loss > 0, v, 0.5)
+
+
+def diversity(state: ClientState, round_idx: jax.Array, cfg: HeteRoScoreConfig) -> jax.Array:
+    """Eq (4): JS(P_k || P_avg) with decaying weight 2·(1 − 0.5·min(t/100, 1))."""
+    t = jnp.asarray(round_idx, jnp.float32)
+    decay = 2.0 * (1.0 - 0.5 * jnp.minimum(t / cfg.diversity_decay_rounds, 1.0))
+    return state.label_js * decay
+
+
+def momentum(state: ClientState) -> jax.Array:
+    """Eq (5): sigmoid-bounded relative loss improvement, range [-0.5, 1.5].
+
+    m_k = (L(w_{t-2}) - L(w_{t-1})) / L(w_{t-2});  M = 2/(1+e^{-5 m}) - 0.5.
+    Clients without two observations get the neutral M(0) = 0.5.
+    """
+    m = (state.loss_prev2 - state.loss_prev) / (state.loss_prev2 + EPS)
+    m = jnp.where(state.has_momentum > 0, m, 0.0)
+    return 2.0 / (1.0 + jnp.exp(-5.0 * m)) - 0.5
+
+
+def fairness(state: ClientState, cfg: HeteRoScoreConfig) -> jax.Array:
+    """Eq (6): F_k = (1 + η · h_k / max_j h_j)^{-2} ∈ (0, 1]."""
+    h = state.part_count.astype(jnp.float32)
+    hmax = jnp.maximum(jnp.max(h), 1.0)
+    return (1.0 + cfg.eta * h / hmax) ** (-2)
+
+
+def staleness_factor(state: ClientState, round_idx: jax.Array, cfg: HeteRoScoreConfig) -> jax.Array:
+    """Eq (7): St_k = 1 + γ · log(1 + min(t − l_k, T_max)) ∈ [1, 1+γ·log(1+T_max)]."""
+    delta = jnp.minimum(_staleness(state, round_idx), cfg.t_max).astype(jnp.float32)
+    return 1.0 + cfg.gamma * jnp.log1p(delta)
+
+
+def norm_penalty(state: ClientState, cfg: HeteRoScoreConfig) -> jax.Array:
+    """Eq (11): N_k = 1 − α·(2/(1+e^{−3·r_k}) − 1) with r_k = ||Δw_k||²/avg_j||Δw_j||².
+
+    r_k ≥ 0 so the sigmoid term ∈ [0, 1) and N ∈ (1−α, 1]. Clients with no
+    recorded update get r = 1 (average ⇒ mid penalty), matching the paper's
+    "relative to the average" intuition.
+    """
+    sq = state.update_sqnorm
+    have = state.has_loss > 0  # update recorded iff participated at least once
+    denom = jnp.sum(jnp.where(have, sq, 0.0)) / jnp.maximum(jnp.sum(have.astype(jnp.float32)), 1.0)
+    r = jnp.where(have, sq / (denom + EPS), 1.0)
+    sig = 2.0 / (1.0 + jnp.exp(-3.0 * r)) - 1.0
+    return 1.0 - cfg.alpha * sig
+
+
+def compute_score_components(
+    state: ClientState, round_idx: jax.Array, cfg: HeteRoScoreConfig
+) -> Dict[str, jax.Array]:
+    """All six multiplicative-form components as a dict of (K,) arrays."""
+    return {
+        "value": information_value(state),
+        "diversity": diversity(state, round_idx, cfg),
+        "momentum": momentum(state),
+        "fairness": fairness(state, cfg),
+        "staleness": staleness_factor(state, round_idx, cfg),
+        "norm": norm_penalty(state, cfg),
+    }
+
+
+def combine_additive(comp: Dict[str, jax.Array], cfg: HeteRoScoreConfig) -> jax.Array:
+    """Eq (1) with the additive transformations of Eqs (8)–(10):
+
+      S = w_v V' + w_d D + w_m M + w_f (F−1) + w_st (St−1) + w_n (N−1)
+    """
+    return (
+        cfg.w_value * comp["value"]
+        + cfg.w_diversity * comp["diversity"]
+        + cfg.w_momentum * comp["momentum"]
+        + cfg.w_fairness * (comp["fairness"] - 1.0)
+        + cfg.w_staleness * (comp["staleness"] - 1.0)
+        + cfg.w_norm * (comp["norm"] - 1.0)
+    )
+
+
+def combine_multiplicative(comp: Dict[str, jax.Array], cfg: HeteRoScoreConfig) -> jax.Array:
+    """Eq (2): S = (V'·D)·M·F·St·N (ablation variant).
+
+    The paper's multiplicative form degenerates when V' or D is exactly 0, so
+    (exactly as a real implementation must) we floor the first two factors at
+    EPS; M enters shifted to its positive part + EPS to keep the product's
+    sign meaningful.
+    """
+    vd = jnp.maximum(comp["value"], EPS) * jnp.maximum(comp["diversity"], EPS)
+    m = jnp.maximum(comp["momentum"] + 0.5, EPS)  # shift [-0.5,1.5] → [0,2]
+    return vd * m * comp["fairness"] * comp["staleness"] * comp["norm"]
+
+
+def compute_scores(
+    state: ClientState,
+    round_idx: jax.Array,
+    cfg: HeteRoScoreConfig,
+    *,
+    additive: bool = True,
+) -> jax.Array:
+    """Full HeteRo-Select score S_k(t) for every client (paper Eq 1 / Eq 2)."""
+    comp = compute_score_components(state, round_idx, cfg)
+    if additive:
+        return combine_additive(comp, cfg)
+    return combine_multiplicative(comp, cfg)
+
+
+def score_bounds(cfg: HeteRoScoreConfig) -> tuple[float, float]:
+    """(S_min, S_max) of the non-staleness part of the additive score.
+
+    Used by Thm III.3's exploration bound (theory.py). Ranges follow the
+    component ranges documented in the module docstring; JS ≤ log 2.
+    """
+    js_max = float(jnp.log(2.0))
+    s_min = (
+        cfg.w_value * 0.0
+        + cfg.w_diversity * 0.0
+        + cfg.w_momentum * (-0.5)
+        + cfg.w_fairness * (-1.0)
+        + cfg.w_norm * (-cfg.alpha)
+    )
+    s_max = (
+        cfg.w_value * 1.0
+        + cfg.w_diversity * 2.0 * js_max
+        + cfg.w_momentum * 1.5
+        + cfg.w_fairness * 0.0
+        + cfg.w_norm * 0.0
+    )
+    return float(s_min), float(s_max)

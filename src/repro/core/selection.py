@@ -1,0 +1,195 @@
+"""Probabilistic client selection — paper Eq (12) + baselines.
+
+``HeteRo-Select``: softmax over scores with dynamic temperature
+τ(t) = τ0·(1 − 0.5·min(t/100, 1)), then probability-weighted sampling of m
+clients *without replacement* (Gumbel-top-m — exact for the Plackett–Luce
+model induced by the softmax).
+
+Baselines (paper Sec V):
+  * ``random``          — FedAvg-style uniform sampling [McMahan et al. 17].
+  * ``power_of_choice`` — sample d candidates uniformly, keep the m with the
+                          highest local loss [Cho et al. 20].
+  * ``oort``            — statistical utility with an exploitation/
+                          exploration split, a participation staleness term
+                          and the system-utility straggler penalty
+                          (speeds from fed.availability.SystemProfile)
+                          [Lai et al., OSDI 21].
+
+Every selector is a pure function
+``(key, state, round_idx) -> (selected_mask, probs)`` so the whole FL loop
+stays jittable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import HeteRoScoreConfig, compute_scores
+from repro.core.state import ClientState, staleness as _staleness
+
+SelectFn = Callable[[jax.Array, ClientState, jax.Array], Tuple[jax.Array, jax.Array]]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SelectorConfig:
+    """Selection-policy hyper-parameters (paper Sec III-B.6)."""
+
+    num_selected: int = 6          # m — clients per round (50% of 12)
+    tau0: float = 1.0              # base softmax temperature τ0
+    tau_decay_rounds: int = 100    # the /100 in τ(t)
+    additive: bool = True          # Eq (1) vs Eq (2)
+    poc_candidates: int = 0        # Power-of-Choice d (0 ⇒ 2m)
+    oort_explore_frac: float = 0.1 # Oort ε — fraction of slots for exploration
+    oort_staleness_coef: float = 0.1
+    oort_system_alpha: float = 2.0 # Oort system-utility exponent
+
+
+def dynamic_temperature(round_idx: jax.Array, cfg: SelectorConfig) -> jax.Array:
+    """τ(t) = τ0 · (1 − 0.5·min(t/100, 1)) — Eq (12) / Sec III-B.6."""
+    t = jnp.asarray(round_idx, jnp.float32)
+    return cfg.tau0 * (1.0 - 0.5 * jnp.minimum(t / cfg.tau_decay_rounds, 1.0))
+
+
+def selection_probabilities(scores: jax.Array, tau: jax.Array) -> jax.Array:
+    """Eq (12): p_k = softmax(S_k / τ) over the available-client set."""
+    return jax.nn.softmax(scores / tau)
+
+
+def sample_clients(key: jax.Array, probs: jax.Array, m: int) -> jax.Array:
+    """Sample m distinct clients ∝ probs via Gumbel-top-m; returns bool mask.
+
+    Gumbel-top-m over log p is an exact sampler for successive sampling
+    without replacement from the softmax distribution.
+    """
+    g = jax.random.gumbel(key, probs.shape, probs.dtype)
+    perturbed = jnp.log(probs + 1e-30) + g
+    _, idx = jax.lax.top_k(perturbed, m)
+    return jnp.zeros_like(probs, dtype=bool).at[idx].set(True)
+
+
+# ---------------------------------------------------------------------------
+# Selector implementations
+# ---------------------------------------------------------------------------
+
+
+def heterosel_select(
+    key: jax.Array,
+    state: ClientState,
+    round_idx: jax.Array,
+    *,
+    sel_cfg: SelectorConfig,
+    score_cfg: HeteRoScoreConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """HeteRo-Select: Algorithm 1, phases 1–2."""
+    scores = compute_scores(state, round_idx, score_cfg, additive=sel_cfg.additive)
+    tau = dynamic_temperature(round_idx, sel_cfg)
+    probs = selection_probabilities(scores, tau)
+    mask = sample_clients(key, probs, sel_cfg.num_selected)
+    return mask, probs
+
+
+def random_select(
+    key: jax.Array, state: ClientState, round_idx: jax.Array, *, sel_cfg: SelectorConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Uniform m-of-K sampling (FedAvg baseline)."""
+    k = state.num_clients
+    probs = jnp.full((k,), 1.0 / k, jnp.float32)
+    mask = sample_clients(key, probs, sel_cfg.num_selected)
+    return mask, probs
+
+
+def power_of_choice_select(
+    key: jax.Array, state: ClientState, round_idx: jax.Array, *, sel_cfg: SelectorConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Power-of-Choice: d uniform candidates, keep top-m by local loss.
+
+    Unobserved clients carry loss 0 in ``loss_prev``; PoC treats them as
+    high-value by assigning them the current max loss (optimistic init) —
+    otherwise the method can never discover anyone, which is not what the
+    original algorithm (which assumes an oracle loss) does.
+    """
+    k = state.num_clients
+    m = sel_cfg.num_selected
+    d = sel_cfg.poc_candidates or min(2 * m, k)
+    kc, _ = jax.random.split(key)
+    cand = sample_clients(kc, jnp.full((k,), 1.0 / k, jnp.float32), d)
+    opt_loss = jnp.where(state.has_loss > 0, state.loss_prev, jnp.max(state.loss_prev) + 1.0)
+    cand_loss = jnp.where(cand, opt_loss, -jnp.inf)
+    _, idx = jax.lax.top_k(cand_loss, m)
+    mask = jnp.zeros((k,), bool).at[idx].set(True)
+    probs = cand.astype(jnp.float32) / d  # candidate distribution (diagnostic)
+    return mask, probs
+
+
+def oort_select(
+    key: jax.Array, state: ClientState, round_idx: jax.Array, *,
+    sel_cfg: SelectorConfig, speeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Oort's guided selection: statistical × system utility + explore split.
+
+    util_k = loss_k · (1 + c·√staleness) · min(1, speed_k)^α — the system
+    term penalizes clients slower than the preferred round duration
+    (``speeds`` = T_pref/t_k from fed.availability.SystemProfile; omit for a
+    homogeneous fleet). A fraction ε of the m slots goes to never-explored
+    clients chosen uniformly; the exploit slots are greedy top-by-utility.
+    """
+    k = state.num_clients
+    m = sel_cfg.num_selected
+    m_explore = max(int(round(sel_cfg.oort_explore_frac * m)), 1)
+    m_exploit = m - m_explore
+    kx, ke = jax.random.split(key)
+
+    stale = _staleness(state, round_idx).astype(jnp.float32)
+    util = state.loss_prev * (1.0 + sel_cfg.oort_staleness_coef * jnp.sqrt(jnp.minimum(stale, 100.0)))
+    if speeds is not None:
+        sys_util = jnp.minimum(jnp.asarray(speeds, jnp.float32), 1.0) ** sel_cfg.oort_system_alpha
+        util = util * sys_util
+    explored = state.has_loss > 0
+    exploit_util = jnp.where(explored, util, -jnp.inf)
+    _, exploit_idx = jax.lax.top_k(exploit_util, m_exploit)
+    mask = jnp.zeros((k,), bool).at[exploit_idx].set(True)
+    # Exploration slots: uniform over unexplored (fall back to uniform-all).
+    unexplored = (~explored) & (~mask)
+    any_unexplored = jnp.any(unexplored)
+    w = jnp.where(unexplored, 1.0, jnp.where(any_unexplored, 0.0, (~mask).astype(jnp.float32)))
+    w = w / jnp.maximum(jnp.sum(w), 1e-9)
+    emask = sample_clients(ke, w, m_explore)
+    mask = mask | emask
+    probs = jax.nn.softmax(jnp.where(jnp.isfinite(exploit_util), exploit_util, -1e9))
+    return mask, probs
+
+
+def make_selector(
+    name: str,
+    sel_cfg: SelectorConfig,
+    score_cfg: HeteRoScoreConfig | None = None,
+    *,
+    speeds: Optional[jax.Array] = None,
+) -> SelectFn:
+    """Factory: 'heterosel' | 'heterosel_mult' | 'random' | 'power_of_choice' | 'oort'.
+
+    ``speeds`` (K,) enables Oort's system-utility term on heterogeneous
+    fleets (fed.availability.SystemProfile.speeds()).
+    """
+    score_cfg = score_cfg or HeteRoScoreConfig()
+    if name == "heterosel":
+        return functools.partial(heterosel_select, sel_cfg=sel_cfg, score_cfg=score_cfg)
+    if name == "heterosel_mult":
+        mult = dataclasses.replace(sel_cfg, additive=False)
+        return functools.partial(heterosel_select, sel_cfg=mult, score_cfg=score_cfg)
+    if name == "random":
+        return functools.partial(random_select, sel_cfg=sel_cfg)
+    if name == "power_of_choice":
+        return functools.partial(power_of_choice_select, sel_cfg=sel_cfg)
+    if name == "oort":
+        return functools.partial(oort_select, sel_cfg=sel_cfg, speeds=speeds)
+    raise ValueError(f"unknown selector '{name}'")
+
+
+SELECTORS = ("heterosel", "heterosel_mult", "random", "power_of_choice", "oort")

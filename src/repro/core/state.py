@@ -1,0 +1,108 @@
+"""Per-client metadata tracked by the server across federated rounds.
+
+Everything the HeteRo-Select score (paper Sec III-B) needs is a flat
+``(K,)``-shaped array so that scoring is a single vectorized computation
+(and can be offloaded to the fused Pallas kernel for very large federations).
+
+The state is a registered pytree, so it threads through ``jax.jit`` /
+``lax.scan`` round loops without host round-trips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel for "never selected" — keeps staleness = t - last_selected large.
+NEVER = -(10**6)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ClientState:
+    """Server-side per-client metadata, all ``(K,)`` float32/int32 arrays.
+
+    Attributes:
+      loss_prev:    L_k(w_{t-1}) — latest observed local loss per client.
+      loss_prev2:   L_k(w_{t-2}) — the loss one observation earlier (momentum).
+      label_js:     JS(P_k || P_avg) per client (static under fixed data).
+      part_count:   h_k — number of times client k has participated.
+      last_selected: l_k — last round client k was selected (NEVER if never).
+      update_sqnorm: ||w_k^{t'} - w_{t'-1}||^2 from client k's last update.
+      has_loss:     1.0 once a loss observation exists (scores fall back to
+                    neutral values before first observation).
+      has_momentum: 1.0 once two observations exist.
+    """
+
+    loss_prev: jax.Array
+    loss_prev2: jax.Array
+    label_js: jax.Array
+    part_count: jax.Array
+    last_selected: jax.Array
+    update_sqnorm: jax.Array
+    has_loss: jax.Array
+    has_momentum: jax.Array
+
+    @property
+    def num_clients(self) -> int:
+        return self.loss_prev.shape[0]
+
+
+def init_client_state(num_clients: int, label_js: Optional[jax.Array] = None) -> ClientState:
+    """Fresh state at round 0. ``label_js`` comes from fed.partition."""
+    k = num_clients
+    if label_js is None:
+        label_js = jnp.zeros((k,), jnp.float32)
+    return ClientState(
+        loss_prev=jnp.zeros((k,), jnp.float32),
+        loss_prev2=jnp.zeros((k,), jnp.float32),
+        label_js=jnp.asarray(label_js, jnp.float32),
+        part_count=jnp.zeros((k,), jnp.int32),
+        last_selected=jnp.full((k,), NEVER, jnp.int32),
+        update_sqnorm=jnp.zeros((k,), jnp.float32),
+        has_loss=jnp.zeros((k,), jnp.float32),
+        has_momentum=jnp.zeros((k,), jnp.float32),
+    )
+
+
+def update_client_state(
+    state: ClientState,
+    *,
+    round_idx: jax.Array,
+    selected_mask: jax.Array,
+    observed_loss: jax.Array,
+    observed_sqnorm: jax.Array,
+) -> ClientState:
+    """Fold one round's observations into the metadata (Algorithm 1, line 24).
+
+    Args:
+      round_idx: scalar int32 — the just-finished round t.
+      selected_mask: (K,) bool — which clients participated this round.
+      observed_loss: (K,) — local loss measured by participants (ignored for
+        non-participants).
+      observed_sqnorm: (K,) — squared update norms of participants.
+    """
+    sel = selected_mask
+    self_f = sel.astype(jnp.float32)
+    new_loss_prev2 = jnp.where(sel, state.loss_prev, state.loss_prev2)
+    new_loss_prev = jnp.where(sel, observed_loss, state.loss_prev)
+    new_has_momentum = jnp.where(sel & (state.has_loss > 0), 1.0, state.has_momentum)
+    new_has_loss = jnp.maximum(state.has_loss, self_f)
+    return ClientState(
+        loss_prev=new_loss_prev,
+        loss_prev2=new_loss_prev2,
+        label_js=state.label_js,
+        part_count=state.part_count + sel.astype(jnp.int32),
+        last_selected=jnp.where(sel, jnp.asarray(round_idx, jnp.int32), state.last_selected),
+        update_sqnorm=jnp.where(sel, observed_sqnorm, state.update_sqnorm),
+        has_loss=new_has_loss,
+        has_momentum=new_has_momentum,
+    )
+
+
+def staleness(state: ClientState, round_idx: jax.Array) -> jax.Array:
+    """Δ_k = t - l_k, clipped to ≥0 (never-selected clients get huge Δ)."""
+    return jnp.maximum(jnp.asarray(round_idx, jnp.int32) - state.last_selected, 0)

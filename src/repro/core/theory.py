@@ -1,0 +1,90 @@
+"""Closed forms from the paper's theory section (Sec III-D + Appendix A).
+
+These are used both as library utilities (e.g. suggesting μ via Lemma A.4)
+and as oracles for the property tests in ``tests/test_theory.py``, which
+verify the *implementation* respects the paper's bounds:
+
+  * Thm III.3 — exploration lower bound ε_k(t) on selection probability.
+  * Thm III.4 — FedProx local-drift bound 2E²η²(G²+B²)/(1+Eημ).
+  * Lemma A.4 — optimal proximal coefficient μ*.
+  * Thm III.2 / A.1 — effective heterogeneity B_sel² of a selected subset.
+  * Prop A.5 — CV(softmax) comparison additive vs multiplicative.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import HeteRoScoreConfig, score_bounds
+from repro.core.selection import SelectorConfig, dynamic_temperature
+
+
+def exploration_lower_bound(
+    staleness: jax.Array,
+    round_idx: jax.Array,
+    sel_cfg: SelectorConfig,
+    score_cfg: HeteRoScoreConfig,
+) -> jax.Array:
+    """Thm III.3 / Eq (20): ε_k(t) ≤ p_k(t) for a client Δ_k rounds stale.
+
+    ε_k = e^{(S_min + γ·log(1+Δ_k))/τ} /
+          (e^{(S_min + γ·log(1+Δ_k))/τ} + (m−1)·e^{(S_max + γ·log(1+T_max))/τ})
+
+    Note the appendix form (Eq 20) upper-bounds competitors by
+    S_max + γ log(1+T_max); we use that (tighter-correct) version.
+    """
+    s_min, s_max = score_bounds(score_cfg)
+    tau = dynamic_temperature(round_idx, sel_cfg)
+    delta = jnp.minimum(staleness, score_cfg.t_max).astype(jnp.float32)
+    mine = jnp.exp((s_min + score_cfg.gamma * jnp.log1p(delta)) / tau)
+    other = jnp.exp(
+        (s_max + score_cfg.gamma * jnp.log1p(float(score_cfg.t_max))) / tau
+    )
+    m = sel_cfg.num_selected
+    return mine / (mine + (m - 1) * other)
+
+
+def fedprox_drift_bound(
+    local_steps: int, lr: float, mu: float, g_sq: float, b_sq: float
+) -> float:
+    """Thm III.4 / Eq (15): E||w_k^{t,E} − w_t||² ≤ 2E²η²(G²+B²)/(1+Eημ)."""
+    e, eta = float(local_steps), float(lr)
+    return 2.0 * e * e * eta * eta * (g_sq + b_sq) / (1.0 + e * eta * mu)
+
+
+def optimal_mu(
+    local_steps: int, lr: float, g_sq: float, b_sel_sq: float, dist_sq: float
+) -> float:
+    """Lemma A.4 / Eq (21): μ* = E·η·(G² + B_sel²) / ||w0 − w*||²."""
+    return float(local_steps) * float(lr) * (g_sq + b_sel_sq) / max(dist_sq, 1e-12)
+
+
+def effective_heterogeneity(
+    client_grads: jax.Array, selected_mask: jax.Array
+) -> jax.Array:
+    """Thm III.2 / Eq (A.1): B_sel² = (1/m) Σ_{k∈C_t} ||∇f_k − ∇f||².
+
+    ``client_grads``: (K, d) stacked per-client full gradients;
+    the *global* gradient is the population mean (uniform weights, matching
+    the paper's f = (1/K) Σ f_k).
+    """
+    gbar = jnp.mean(client_grads, axis=0)
+    b_k = jnp.sum((client_grads - gbar) ** 2, axis=-1)
+    m = jnp.maximum(jnp.sum(selected_mask.astype(jnp.float32)), 1.0)
+    return jnp.sum(jnp.where(selected_mask, b_k, 0.0)) / m
+
+
+def population_heterogeneity(client_grads: jax.Array) -> jax.Array:
+    """B² = (1/K) Σ_k ||∇f_k − ∇f||² (Assumption A4)."""
+    gbar = jnp.mean(client_grads, axis=0)
+    return jnp.mean(jnp.sum((client_grads - gbar) ** 2, axis=-1))
+
+
+def softmax_cv(scores: jax.Array, tau: float = 1.0) -> jax.Array:
+    """Coefficient of variation of softmax probabilities (Prop A.5 proxy).
+
+    Higher CV ⇒ more concentrated (less fair) selection.
+    """
+    p = jax.nn.softmax(scores / tau)
+    return jnp.std(p) / (jnp.mean(p) + 1e-12)

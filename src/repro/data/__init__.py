@@ -1,0 +1,11 @@
+"""Data: synthetic federated datasets + dry-run input specs."""
+
+from repro.data.synthetic import (
+    VisionFedData,
+    LMFedData,
+    make_vision_data,
+    make_lm_data,
+    input_specs,
+)
+
+__all__ = ["VisionFedData", "LMFedData", "make_vision_data", "make_lm_data", "input_specs"]

@@ -1,0 +1,201 @@
+"""Synthetic federated datasets + dry-run input specs.
+
+No-internet substitute for CIFAR-10/Fashion-MNIST/MNIST (DESIGN.md §1): a
+class-conditional image generator whose difficulty is controlled by the
+template/noise ratio. Label-skew heterogeneity, client drift and selection
+dynamics — the phenomena the paper studies — are all driven by the Dirichlet
+partition, which we reproduce exactly; only the pixel source is synthetic.
+
+Also provides the LM/audio/VLM federated stand-ins for the big architectures
+and the ``input_specs`` ShapeDtypeStruct providers used by launch/dryrun.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig, ModelConfig, ShapeConfig
+from repro.fed.partition import client_label_js, dirichlet_partition
+
+
+# ---------------------------------------------------------------------------
+# Vision: class-conditional images (CIFAR-10 stand-in)
+# ---------------------------------------------------------------------------
+
+
+def _class_templates(rng: np.random.Generator, num_classes: int, size: int) -> np.ndarray:
+    """Smooth class templates: low-frequency random fields, upsampled."""
+    low = rng.normal(size=(num_classes, size // 4, size // 4, 3))
+    up = np.repeat(np.repeat(low, 4, axis=1), 4, axis=2)
+    return up / np.abs(up).max(axis=(1, 2, 3), keepdims=True)
+
+
+@dataclasses.dataclass
+class VisionFedData:
+    """Per-client non-IID image classification data (Dirichlet label skew)."""
+
+    images: np.ndarray          # (N, H, W, 3) float32
+    labels: np.ndarray          # (N,) int32
+    client_indices: List[np.ndarray]
+    label_dists: np.ndarray     # (K, C)
+    label_js: np.ndarray        # (K,)
+    test_images: np.ndarray
+    test_labels: np.ndarray
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.client_indices)
+
+    def client_batches(self, k: int, steps: int, batch: int,
+                       rng: np.random.Generator) -> Dict[str, jnp.ndarray]:
+        idx = self.client_indices[k]
+        pick = rng.choice(idx, size=(steps, batch), replace=True)
+        return {
+            "images": jnp.asarray(self.images[pick]),
+            "labels": jnp.asarray(self.labels[pick]),
+        }
+
+    def eval_batch(self) -> Dict[str, jnp.ndarray]:
+        return {
+            "images": jnp.asarray(self.test_images),
+            "labels": jnp.asarray(self.test_labels),
+        }
+
+
+def make_vision_data(
+    fed: FedConfig,
+    *,
+    num_classes: int = 10,
+    image_size: int = 32,
+    train_per_class: int = 256,
+    test_per_class: int = 64,
+    noise: float = 0.8,
+    seed: int | None = None,
+) -> VisionFedData:
+    seed = fed.seed if seed is None else seed
+    rng = np.random.default_rng(seed)
+    templates = _class_templates(rng, num_classes, image_size)
+
+    def sample(n_per_class):
+        labels = np.repeat(np.arange(num_classes), n_per_class)
+        imgs = templates[labels] + noise * rng.normal(
+            size=(len(labels), image_size, image_size, 3)
+        )
+        return imgs.astype(np.float32), labels.astype(np.int32)
+
+    images, labels = sample(train_per_class)
+    test_images, test_labels = sample(test_per_class)
+    client_indices, dists = dirichlet_partition(
+        labels, fed.num_clients, fed.dirichlet_alpha, seed=seed
+    )
+    return VisionFedData(
+        images=images, labels=labels,
+        client_indices=client_indices, label_dists=dists,
+        label_js=client_label_js(dists),
+        test_images=test_images, test_labels=test_labels,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Language modelling: per-client "dialect" token streams
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LMFedData:
+    """Per-client token streams. Heterogeneity = client-specific bigram rules."""
+
+    vocab: int
+    seq_len: int
+    rules: np.ndarray   # (K, 2) int — affine bigram rule per client
+    label_js: np.ndarray
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.rules)
+
+    def _sample(self, k: int, n: int, rng: np.random.Generator) -> np.ndarray:
+        a, b = self.rules[k]
+        toks = np.empty((n, self.seq_len), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab, size=n)
+        noise = rng.random((n, self.seq_len)) < 0.1
+        rand = rng.integers(0, self.vocab, size=(n, self.seq_len))
+        for t in range(1, self.seq_len):
+            nxt = (toks[:, t - 1] * a + b) % self.vocab
+            toks[:, t] = np.where(noise[:, t], rand[:, t], nxt)
+        return toks
+
+    def client_batches(self, k: int, steps: int, batch: int,
+                       rng: np.random.Generator) -> Dict[str, jnp.ndarray]:
+        toks = self._sample(k, steps * batch, rng).reshape(steps, batch, self.seq_len)
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+
+    def eval_batch(self, batch: int = 32) -> Dict[str, jnp.ndarray]:
+        rng = np.random.default_rng(1234)
+        per = max(batch // self.num_clients, 1)
+        toks = np.concatenate([self._sample(k, per, rng) for k in range(self.num_clients)])
+        t = jnp.asarray(toks)
+        return {"tokens": t, "labels": t}
+
+
+def make_lm_data(fed: FedConfig, vocab: int, seq_len: int = 64) -> LMFedData:
+    rng = np.random.default_rng(fed.seed)
+    a = rng.choice([3, 5, 7, 11, 13, 17, 19, 23], size=fed.num_clients)
+    b = rng.integers(0, vocab, size=fed.num_clients)
+    rules = np.stack([a, b], axis=1)
+    # Unigram distribution of each rule's orbit is roughly uniform; use rule
+    # distance as a diversity proxy (JS over induced unigram histograms).
+    hists = np.zeros((fed.num_clients, min(vocab, 64)))
+    for k in range(fed.num_clients):
+        s = LMFedData(vocab, seq_len, rules, np.zeros(fed.num_clients))._sample(
+            k, 8, np.random.default_rng(k)
+        )
+        hists[k] = np.bincount(s.ravel() % hists.shape[1], minlength=hists.shape[1])
+    hists = hists / hists.sum(axis=1, keepdims=True)
+    from repro.fed.partition import js_divergence
+
+    js = js_divergence(hists, hists.mean(axis=0, keepdims=True))
+    return LMFedData(vocab=vocab, seq_len=seq_len, rules=rules, label_js=js)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct — no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for (arch × input-shape), per DESIGN.md §4.
+
+    train/prefill: the full (global_batch, seq_len) batch.
+    decode: one new token per sequence (the KV/state cache is built
+    separately by the launcher, sized to seq_len).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    f32, i32, bf16 = jnp.float32, jnp.int32, jnp.bfloat16
+    if cfg.family == "resnet":
+        return {
+            "images": jax.ShapeDtypeStruct((b, cfg.image_size, cfg.image_size, 3), f32),
+            "labels": jax.ShapeDtypeStruct((b,), i32),
+        }
+    if cfg.family == "encoder":
+        return {
+            "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16),
+            "mask": jax.ShapeDtypeStruct((b, s), jnp.bool_),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    if shape.kind == "decode":
+        out = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    else:
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    if cfg.family == "vlm":
+        out["vision_embeds"] = jax.ShapeDtypeStruct((b, cfg.vision_tokens, cfg.d_model), bf16)
+    return out

@@ -1,0 +1,5 @@
+"""Federated substrate: partitioning, FedProx clients, aggregation, round loop."""
+
+from repro.fed.loop import FLResult, run_federated
+
+__all__ = ["FLResult", "run_federated"]

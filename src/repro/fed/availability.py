@@ -1,0 +1,98 @@
+"""Client availability & system heterogeneity — relaxing Assumption A5.
+
+The paper assumes all clients are available every round (A5) and defers
+partial availability to Oort's treatment. A production federation cannot:
+devices churn. This module provides
+
+  * ``AvailabilityTrace`` — per-round availability masks from a two-state
+    (online/offline) Markov model, the standard churn simulator,
+  * ``SystemProfile`` — per-client speed multipliers (compute + network),
+    enabling Oort's full utility (statistical × system) and deadline-based
+    round management,
+  * ``mask_selector`` — wraps any selector so unavailable clients get
+    −∞ score mass (zero probability) while the metadata bookkeeping
+    (staleness! Eq 7) keeps accruing, which is exactly what the paper's
+    staleness bonus is for.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.selection import SelectFn, sample_clients
+
+
+@dataclasses.dataclass
+class AvailabilityTrace:
+    """Two-state Markov churn: P(stay online)=p_oo, P(come online)=p_fo."""
+
+    num_clients: int
+    p_stay_online: float = 0.9
+    p_come_online: float = 0.6
+    seed: int = 0
+
+    def masks(self, rounds: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        m = np.zeros((rounds, self.num_clients), bool)
+        state = rng.uniform(size=self.num_clients) < 0.8
+        for t in range(rounds):
+            # guarantee a quorum: if fewer than 2 online, wake the stalest
+            if state.sum() < 2:
+                state[rng.integers(0, self.num_clients, size=2)] = True
+            m[t] = state
+            p = np.where(state, self.p_stay_online, self.p_come_online)
+            state = rng.uniform(size=self.num_clients) < p
+        return m
+
+
+@dataclasses.dataclass
+class SystemProfile:
+    """Per-client wall-clock multipliers (compute × network), log-normal."""
+
+    num_clients: int
+    sigma: float = 0.5
+    seed: int = 0
+
+    def speeds(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        return np.exp(rng.normal(0.0, self.sigma, self.num_clients))
+
+    def round_time(self, selected_mask: np.ndarray) -> float:
+        """Synchronous round ⇒ the straggler sets the pace."""
+        sp = self.speeds()
+        sel = np.flatnonzero(selected_mask)
+        return float(sp[sel].max()) if len(sel) else 0.0
+
+
+def mask_selector(select: SelectFn, availability: jnp.ndarray,
+                  num_selected: int = 0) -> SelectFn:
+    """Restrict any selector to the available set A_t (paper's A_t notation).
+
+    ``availability``: (rounds, K) bool. Unavailable clients get zero
+    probability and the m slots are re-sampled from the available
+    distribution (jit-safe: m is static; if fewer than m clients are online
+    the overflow picks are stripped by the final mask — a short round,
+    exactly what a real federation does).
+    """
+
+    def wrapped(key, state, round_idx):
+        mask, probs = select(key, state, round_idx)
+        m = num_selected or int(mask.shape[0] // 2)
+        avail = availability[round_idx]
+        probs = jnp.where(avail, probs, 0.0)
+        norm = jnp.sum(probs)
+        # fall back to uniform-over-available if the selector's mass vanished
+        probs = jnp.where(
+            norm > 1e-9, probs / jnp.maximum(norm, 1e-9),
+            avail.astype(jnp.float32) / jnp.maximum(jnp.sum(avail), 1),
+        )
+        new_mask = sample_clients(jax.random.fold_in(key, 1), probs, m)
+        return new_mask & avail, probs
+
+    return wrapped

@@ -1,0 +1,105 @@
+"""Client-side FedProx local training (paper Algorithm 1, lines 17–23).
+
+Local objective (Eq 13):  min_w  L_k(w) + (μ/2)·||w − w_global||².
+
+The local update is plain SGD on that objective (Algorithm 1 line 21):
+    w ← w − α_lr (∇L_k(w) + μ(w − w_global))
+— deliberately optimizer-state-free, which is what makes FedProx-style FL of
+very large models HBM-feasible (DESIGN.md §2). ``local_train`` scans over a
+pre-batched epoch stack so the whole client visit is one jitted call.
+
+Returns the update squared-norm ‖w_k − w_global‖² and the final mini-batch
+loss — the metadata HeteRo-Select's N_k(t) / V_k(t) scores consume.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+LossFn = Callable[..., jax.Array]  # (params, batch, **kw) -> scalar
+
+
+class LocalResult(NamedTuple):
+    params: Any          # w_k after E epochs
+    mean_loss: jax.Array  # mean train loss over the visit (server metadata)
+    last_loss: jax.Array  # final mini-batch loss
+    update_sqnorm: jax.Array  # ||w_k − w_global||²
+
+
+def tree_sqnorm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+
+
+def fedprox_grad(loss_fn: LossFn, params: Any, anchor: Any, batch: Any,
+                 mu: float, **loss_kw) -> Tuple[jax.Array, Any]:
+    """Value and FedProx gradient: ∇L + μ(w − w_anchor)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch, **loss_kw)
+    if mu:
+        grads = jax.tree_util.tree_map(
+            lambda g, w, a: g + mu * (w.astype(jnp.float32) - a.astype(jnp.float32)).astype(g.dtype),
+            grads, params, anchor,
+        )
+    return loss, grads
+
+
+def sgd_step(params: Any, grads: Any, lr: float) -> Any:
+    return jax.tree_util.tree_map(
+        lambda w, g: (w.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(w.dtype),
+        params, grads,
+    )
+
+
+def local_train(
+    loss_fn: LossFn,
+    params: Any,
+    batches: Dict[str, jax.Array],
+    *,
+    lr: float,
+    mu: float,
+    **loss_kw,
+) -> LocalResult:
+    """Run one client visit: scan SGD+prox over the stacked batches.
+
+    ``batches``: pytree whose leaves have a leading (num_steps,) axis —
+    E local epochs × batches-per-epoch already flattened by the data layer.
+    ``params`` doubles as the FedProx anchor w_global (it is the round's
+    global model on entry).
+    """
+    anchor = params
+
+    def step(w, batch):
+        loss, grads = fedprox_grad(loss_fn, w, anchor, batch, mu, **loss_kw)
+        return sgd_step(w, grads, lr), loss
+
+    new_params, losses = jax.lax.scan(step, params, batches)
+    delta_sq = tree_sqnorm(
+        jax.tree_util.tree_map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32), new_params, anchor
+        )
+    )
+    return LocalResult(
+        params=new_params,
+        mean_loss=jnp.mean(losses),
+        last_loss=losses[-1],
+        update_sqnorm=delta_sq,
+    )
+
+
+def local_train_step(
+    loss_fn: LossFn,
+    params: Any,
+    anchor: Any,
+    batch: Any,
+    *,
+    lr: float,
+    mu: float,
+    **loss_kw,
+) -> Tuple[Any, jax.Array]:
+    """Single FedProx SGD step — the unit the multi-pod dry-run lowers."""
+    loss, grads = fedprox_grad(loss_fn, params, anchor, batch, mu, **loss_kw)
+    return sgd_step(params, grads, lr), loss

@@ -1,0 +1,149 @@
+"""Update compression — the paper's declared future work (Sec II-B):
+"Integrating update compression with intelligent selection could further
+improve efficiency, an area we leave for future exploration."
+
+We implement the two families the paper cites and compose them with
+HeteRo-Select:
+
+  * top-k sparsification with error feedback (client keeps the residual and
+    adds it to the next update — Stich et al.'s memory trick, without which
+    sparse FL diverges),
+  * int8 per-tensor quantization (FedPAQ-style [Reisizadeh et al. 20]).
+
+Compression operates on the client *delta* Δ = w_k − w_global (never on raw
+weights), which is what actually crosses the network in a deployment.
+``CompressionStats`` reports the achieved ratio so EXPERIMENTS.md can quote
+bytes-on-wire per round.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedDelta(NamedTuple):
+    payload: Any          # pytree of compressed leaves
+    meta: Any             # pytree of per-leaf metadata (scales / indices)
+    kind: str
+
+
+class CompressionStats(NamedTuple):
+    raw_bytes: int
+    wire_bytes: int
+
+    @property
+    def ratio(self) -> float:
+        return self.raw_bytes / max(self.wire_bytes, 1)
+
+
+def _leaf_bytes(x: jax.Array) -> int:
+    return x.size * x.dtype.itemsize
+
+
+def tree_delta(new_params: Any, anchor: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+        new_params, anchor)
+
+
+def tree_apply_delta(anchor: Any, delta: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda a, d: (a.astype(jnp.float32) + d).astype(a.dtype), anchor, delta)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(delta: Any) -> Tuple[CompressedDelta, CompressionStats]:
+    def q(x):
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8), scale
+
+    leaves, treedef = jax.tree_util.tree_flatten(delta)
+    qs = [q(l) for l in leaves]
+    payload = jax.tree_util.tree_unflatten(treedef, [a for a, _ in qs])
+    meta = jax.tree_util.tree_unflatten(treedef, [s for _, s in qs])
+    raw = sum(_leaf_bytes(l) for l in leaves)
+    wire = sum(l.size + 4 for l in leaves)  # int8 + fp32 scale
+    return CompressedDelta(payload, meta, "int8"), CompressionStats(raw, wire)
+
+
+def dequantize_int8(c: CompressedDelta) -> Any:
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, c.payload, c.meta)
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification with error feedback
+# ---------------------------------------------------------------------------
+
+
+def topk_sparsify(delta: Any, frac: float,
+                  residual: Optional[Any] = None
+                  ) -> Tuple[CompressedDelta, Any, CompressionStats]:
+    """Keep the top-``frac`` fraction of entries per leaf (by magnitude).
+
+    Returns (compressed, new_residual, stats). ``residual`` (error feedback)
+    is added to the delta before selection and the unsent remainder becomes
+    the next residual.
+    """
+    if residual is not None:
+        delta = jax.tree_util.tree_map(lambda d, r: d + r, delta, residual)
+
+    def sp(x):
+        flat = x.reshape(-1)
+        k = max(int(flat.size * frac), 1)
+        vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+        sent = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        kept = flat[idx]
+        return (kept, idx.astype(jnp.int32)), (flat - sent).reshape(x.shape)
+
+    leaves, treedef = jax.tree_util.tree_flatten(delta)
+    outs = [sp(l) for l in leaves]
+    payload = jax.tree_util.tree_unflatten(treedef, [p for p, _ in outs])
+    new_resid = jax.tree_util.tree_unflatten(treedef, [r for _, r in outs])
+    shapes = jax.tree_util.tree_unflatten(treedef, [l.shape for l in leaves])
+    raw = sum(_leaf_bytes(l) for l in leaves)
+    wire = sum(p[0].size * 4 + p[1].size * 4 for p, _ in outs)
+    return (CompressedDelta(payload, shapes, "topk"), new_resid,
+            CompressionStats(raw, wire))
+
+
+def desparsify(c: CompressedDelta) -> Any:
+    def d(payload, shape):
+        vals, idx = payload
+        size = 1
+        for s in shape:
+            size *= s
+        return jnp.zeros((size,), jnp.float32).at[idx].set(vals).reshape(shape)
+
+    return jax.tree_util.tree_map(
+        d, c.payload, c.meta,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and not isinstance(x[0], tuple))
+
+
+# ---------------------------------------------------------------------------
+# Server-side aggregation of compressed deltas
+# ---------------------------------------------------------------------------
+
+
+def aggregate_compressed(anchor: Any, compressed: list) -> Any:
+    """FedAvg over decompressed deltas: w ← w_g + mean_k(decode(Δ_k))."""
+    deltas = []
+    for c in compressed:
+        if c.kind == "int8":
+            deltas.append(dequantize_int8(c))
+        elif c.kind == "topk":
+            deltas.append(desparsify(c))
+        else:
+            raise ValueError(c.kind)
+    n = float(len(deltas))
+    mean_delta = jax.tree_util.tree_map(lambda *xs: sum(xs) / n, *deltas)
+    return tree_apply_delta(anchor, mean_delta)

@@ -1,0 +1,75 @@
+"""Server-side aggregation (paper Algorithm 1, line 26) + beyond-paper extras.
+
+The paper aggregates with unweighted FedAvg over the selected subset:
+    w_t ← (1/m) Σ_{k∈S_t} w_t^k
+``fedavg`` implements that; ``fedavg_weighted`` (|D_k|-weighted, the original
+McMahan form) and ``ServerMomentum`` (FedAvgM) are provided as optional
+aggregators and evaluated in EXPERIMENTS.md §Beyond-paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def fedavg(client_params: Sequence[Any]) -> Any:
+    """Unweighted mean of client parameter pytrees."""
+    n = float(len(client_params))
+    return jax.tree_util.tree_map(
+        lambda *xs: (sum(x.astype(jnp.float32) for x in xs) / n).astype(xs[0].dtype),
+        *client_params,
+    )
+
+
+def fedavg_weighted(client_params: Sequence[Any], weights: Sequence[float]) -> Any:
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    return jax.tree_util.tree_map(
+        lambda *xs: sum(wi * x.astype(jnp.float32) for wi, x in zip(w, xs)).astype(xs[0].dtype),
+        *client_params,
+    )
+
+
+def fedavg_stacked(stacked_params: Any, axis_name: Optional[str] = None) -> Any:
+    """FedAvg over a leading client axis (the multi-pod 'pod'-axis path).
+
+    With ``axis_name`` set this is a cross-pod ``pmean`` inside shard_map;
+    otherwise a plain mean over axis 0 of stacked client params.
+    """
+    if axis_name is not None:
+        return jax.tree_util.tree_map(lambda x: jax.lax.pmean(x, axis_name), stacked_params)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype), stacked_params
+    )
+
+
+@dataclasses.dataclass
+class ServerMomentum:
+    """FedAvgM: w_t = w_{t-1} − v_t,  v_t = β v_{t-1} + (w_{t-1} − w̄_t).
+
+    Beyond-paper aggregator — damps the round-to-round oscillation that the
+    paper measures as 'stability drop'.
+    """
+
+    beta: float = 0.9
+    velocity: Any = None
+
+    def aggregate(self, prev_global: Any, client_params: Sequence[Any]) -> Any:
+        avg = fedavg(client_params)
+        delta = jax.tree_util.tree_map(
+            lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32), prev_global, avg
+        )
+        if self.velocity is None:
+            self.velocity = delta
+        else:
+            self.velocity = jax.tree_util.tree_map(
+                lambda v, d: self.beta * v + d, self.velocity, delta
+            )
+        return jax.tree_util.tree_map(
+            lambda p, v: (p.astype(jnp.float32) - v).astype(p.dtype),
+            prev_global, self.velocity,
+        )

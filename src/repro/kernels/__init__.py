@@ -1,0 +1,12 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+flash_attention — blockwise online-softmax attention (prefill hot spot)
+ssd_scan        — Mamba-2 SSD intra-chunk grouped matmuls
+score_select    — fused HeteRo-Select scoring + softmax (the paper's Eqs 1–12)
+moe_gmm         — MegaBlocks-style grouped matmul (scalar-prefetch expert tiles)
+"""
+
+from repro.kernels.moe_gmm import grouped_matmul
+from repro.kernels.ops import flash_mha, ssd_forward, heterosel_probs
+
+__all__ = ["flash_mha", "ssd_forward", "heterosel_probs", "grouped_matmul"]

@@ -1,0 +1,127 @@
+"""Pallas TPU flash-attention kernel (blockwise online-softmax).
+
+TARGET: TPU v5e — MXU-aligned block shapes (multiples of 128 on the S/T
+dims, head_dim ≤ 256 kept whole), fp32 accumulators in VMEM scratch,
+KV streamed HBM→VMEM block-by-block via the innermost grid dimension.
+VALIDATED: interpret=True on CPU against ``ref.mha_reference`` (tests sweep
+shapes/dtypes/causality — tests/test_kernels_flash.py).
+
+Layout: (B, H, S, D) head-major so the (b·h) grid dim is a pure batch dim
+and each program streams one query block against all KV blocks. The grid is
+(BH, n_q, n_kv) with n_kv innermost — TPU executes it sequentially, so the
+running max / denominator / accumulator live in VMEM scratch across KV steps
+(the canonical TPU flash pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, n_kv: int, t_valid: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    run = jnp.logical_or(not causal, ik * block_k <= (iq + 1) * block_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = k_pos < t_valid
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = (
+            acc_ref[...] * corr[:, None]
+            + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,           # (BH, S, D)
+    k: jax.Array,           # (BH, T, D)
+    v: jax.Array,           # (BH, T, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention over flattened (batch·heads) leading dim."""
+    bh, s, d = q.shape
+    t = k.shape[1]
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    n_q = -(-s // block_q)
+    n_kv = -(-t // block_k)
+    pad_s = n_q * block_q - s
+    pad_t = n_kv * block_k - t
+    if pad_s:
+        q = jnp.pad(q, ((0, 0), (0, pad_s), (0, 0)))
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0)))
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=1.0 / (d ** 0.5), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kv=n_kv, t_valid=t,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n_q * block_q, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s]

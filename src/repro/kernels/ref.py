@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` of the brief).
+
+Each reference is the *mathematically direct* implementation — materialized
+score matrices, exact sequential recurrences — deliberately independent of
+the blockwise formulations the kernels (and models) use, so agreement is
+evidence of correctness rather than shared structure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import HeteRoScoreConfig, compute_scores
+from repro.core.state import ClientState
+
+
+def mha_reference(q, k, v, *, causal=True, window=0):
+    """Materialized softmax attention. q: (BH,S,D); k,v: (BH,T,D)."""
+    s_len, t_len = q.shape[1], k.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s_len)[:, None]
+    kpos = jnp.arange(t_len)[None, :]
+    mask = jnp.ones((s_len, t_len), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_reference(x, dt, a_neg, b_in, c_in, h0=None):
+    """Exact sequential SSD recurrence (the definition, O(S) steps).
+
+    x: (B,S,NH,HP); dt: (B,S,NH); a_neg: (NH,); b/c: (B,S,N).
+    Returns (y (B,S,NH,HP), h_final (B,NH,HP,N)).
+    """
+    bsz, s, nh, hp = x.shape
+    n = b_in.shape[-1]
+    h = jnp.zeros((bsz, nh, hp, n), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,NH,HP), (B,NH), (B,N), (B,N)
+        dec = jnp.exp(dtt * a_neg)  # (B,NH)
+        h = dec[:, :, None, None] * h + jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          b_in.transpose(1, 0, 2), c_in.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2, 3), h
+
+
+def score_probs_reference(state: ClientState, round_idx, tau,
+                          cfg: HeteRoScoreConfig):
+    """Paper-faithful jnp scoring (core.scoring) + Eq (12) softmax."""
+    scores = compute_scores(state, round_idx, cfg, additive=True)
+    return jax.nn.softmax(scores / tau), scores
+
+
+def gmm_reference(xs, rhs, group_sizes):
+    """Grouped matmul oracle: per-group dense matmuls, stitched.
+
+    xs: (M, K) sorted by group; rhs: (G, K, N); group_sizes: (G,).
+    Pure-Python segment loop (test sizes only).
+    """
+    import numpy as np
+
+    xs_np = np.asarray(xs, np.float32)
+    rhs_np = np.asarray(rhs, np.float32)
+    sizes = np.asarray(group_sizes)
+    out = np.zeros((xs_np.shape[0], rhs_np.shape[-1]), np.float32)
+    start = 0
+    for g, sz in enumerate(sizes):
+        out[start:start + sz] = xs_np[start:start + sz] @ rhs_np[g]
+        start += sz
+    return jnp.asarray(out, xs.dtype)

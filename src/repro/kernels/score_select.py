@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: fused HeteRo-Select scoring + softmax (paper Eqs 1–12).
+
+The paper's federation has 12 clients; production cross-device federations
+have 10⁴–10⁶. At that scale the six score components + softmax over K
+clients become a fused single-pass kernel: all (K,)-metadata vectors stream
+through VMEM once, min/max/mean statistics and the softmax normalizer are
+computed in-register, and the output is the selection distribution p_k(t).
+
+Block layout: K padded to a multiple of 128 (lane width); one program per
+block with the cross-block reductions done in a first pass over a single
+block grid — for K ≤ 131072 the whole state fits one VMEM block, which is
+the shipped configuration (grid=(1,)).
+
+VALIDATED against ``repro.core.scoring`` + softmax (the paper-faithful jnp
+implementation) in tests/test_kernels_score.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.scoring import HeteRoScoreConfig
+
+LANE = 128
+BIG = 1e30
+
+
+def _score_kernel(loss_ref, loss2_ref, js_ref, cnt_ref, lastsel_ref,
+                  sqnorm_ref, hasloss_ref, hasmom_ref, scalars_ref,
+                  probs_ref, scores_ref, *,
+                  cfg: HeteRoScoreConfig, k_valid: int, kpad: int):
+    t = scalars_ref[0]
+    tau = scalars_ref[1]
+
+    valid = jax.lax.broadcasted_iota(jnp.int32, (kpad,), 0) < k_valid
+    loss = loss_ref[...]
+    loss2 = loss2_ref[...]
+    has_loss = hasloss_ref[...] > 0
+    has_mom = hasmom_ref[...] > 0
+    obs = valid & has_loss
+
+    # Eq (3): min-max normalized information value (neutral 0.5 if unseen)
+    lmin = jnp.min(jnp.where(obs, loss, BIG))
+    lmax = jnp.max(jnp.where(obs, loss, -BIG))
+    v = jnp.clip((loss - lmin) / (lmax - lmin + 1e-8), 0.0, 1.0)
+    v = jnp.where(has_loss, v, 0.5)
+
+    # Eq (4): diversity with decaying weight
+    decay = 2.0 * (1.0 - 0.5 * jnp.minimum(t / cfg.diversity_decay_rounds, 1.0))
+    div = js_ref[...] * decay
+
+    # Eq (5): sigmoid momentum
+    m = jnp.where(has_mom, (loss2 - loss) / (loss2 + 1e-8), 0.0)
+    mom = 2.0 / (1.0 + jnp.exp(-5.0 * m)) - 0.5
+
+    # Eq (6): fairness
+    cnt = cnt_ref[...]
+    hmax = jnp.maximum(jnp.max(jnp.where(valid, cnt, 0.0)), 1.0)
+    fair = (1.0 + cfg.eta * cnt / hmax) ** (-2)
+
+    # Eq (7): staleness
+    stale = jnp.minimum(jnp.maximum(t - lastsel_ref[...], 0.0), float(cfg.t_max))
+    st = 1.0 + cfg.gamma * jnp.log1p(stale)
+
+    # Eq (11): update-norm penalty
+    sq = sqnorm_ref[...]
+    n_obs = jnp.maximum(jnp.sum(jnp.where(obs, 1.0, 0.0)), 1.0)
+    avg = jnp.sum(jnp.where(obs, sq, 0.0)) / n_obs
+    r = jnp.where(has_loss, sq / (avg + 1e-8), 1.0)
+    npen = 1.0 - cfg.alpha * (2.0 / (1.0 + jnp.exp(-3.0 * r)) - 1.0)
+
+    # Eq (1) additive combination (Eqs 8–10 shift the modulating factors)
+    s = (cfg.w_value * v + cfg.w_diversity * div + cfg.w_momentum * mom
+         + cfg.w_fairness * (fair - 1.0) + cfg.w_staleness * (st - 1.0)
+         + cfg.w_norm * (npen - 1.0))
+    scores_ref[...] = s
+
+    # Eq (12): softmax with temperature τ(t) over valid clients
+    z = jnp.where(valid, s / tau, -BIG)
+    zmax = jnp.max(z)
+    e = jnp.where(valid, jnp.exp(z - zmax), 0.0)
+    probs_ref[...] = e / jnp.maximum(jnp.sum(e), 1e-30)
+
+
+def fused_score_probs(
+    loss_prev, loss_prev2, label_js, part_count, last_selected,
+    update_sqnorm, has_loss, has_momentum,
+    *, round_idx, tau, cfg: HeteRoScoreConfig, interpret: bool = False,
+):
+    """Fused scores + selection probabilities for K clients. Returns (probs, scores)."""
+    k = loss_prev.shape[0]
+    kpad = -(-k // LANE) * LANE
+
+    def pad(x):
+        return jnp.pad(x.astype(jnp.float32), (0, kpad - k))
+
+    args = [pad(a) for a in (loss_prev, loss_prev2, label_js,
+                             part_count, last_selected,
+                             update_sqnorm, has_loss, has_momentum)]
+    scalars = jnp.stack([jnp.asarray(round_idx, jnp.float32),
+                         jnp.asarray(tau, jnp.float32)])
+
+    kernel = functools.partial(_score_kernel, cfg=cfg, k_valid=k, kpad=kpad)
+    probs, scores = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((kpad,), lambda i: (0,))] * 8
+        + [pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((kpad,), lambda i: (0,)),
+                   pl.BlockSpec((kpad,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((kpad,), jnp.float32),
+                   jax.ShapeDtypeStruct((kpad,), jnp.float32)],
+        interpret=interpret,
+    )(*args, scalars)
+    return probs[:k], scores[:k]

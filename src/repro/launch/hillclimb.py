@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver (brief: baseline all, hillclimb three).
+
+The three pairs (chosen from the single-pod baseline table — see
+EXPERIMENTS.md §Perf for the selection rationale):
+
+  1. kimi-k2-1t-a32b × train_4k   — worst absolute state: memory-bound,
+     84.8 GB/chip (does not fit), useful-FLOPs ≈ 0.
+  2. kimi-k2-1t-a32b × decode_32k — most collective-bound (7.5 s/token!).
+  3. qwen2-0.5b × train_4k        — worst useful-FLOPs ratio among dense
+     archs (0.09): 14 heads don't divide the 16-way model axis, attention
+     runs replicated. Also the most paper-representative pair: the paper's
+     champion federation trains small models on many clients, so the
+     fed_train_step of the smallest arch is the step HeteRo-Select schedules
+     most often.
+
+Each iteration records hypothesis → change → before/after roofline terms →
+verdict into benchmarks/results/hillclimb.json.
+"""
+
+import dataclasses
+import json
+from typing import Dict
+
+import jax
+
+from repro.configs.registry import get_config, get_shape
+from repro.launch import dryrun
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.steps import build_plan, depth_variant, outer_trips
+from repro.models.layers import set_probe_mode
+from repro.roofline import hlo as roofline
+from repro.sharding.rules import needs_fsdp
+
+RESULTS = os.path.abspath(os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "benchmarks", "results", "hillclimb.json"))
+
+
+def measure(cfg, shape_name: str, mesh, *, fsdp=None, anchor_int8=False) -> Dict:
+    """Same probe-extrapolation measurement as dryrun.run_one, custom cfg."""
+    shape = get_shape(shape_name)
+    fsdp = needs_fsdp(cfg, 16) if fsdp is None else fsdp
+    plan = build_plan(cfg, shape, mesh, fsdp=fsdp, anchor_int8=anchor_int8)
+    compiled = dryrun._compile_plan(plan, mesh)
+    mem = compiled.memory_analysis()
+
+    probes = {}
+    set_probe_mode(True)
+    try:
+        for d in (1, 2):
+            pplan = build_plan(depth_variant(cfg, d), shape, mesh, fsdp=fsdp,
+                               anchor_int8=anchor_int8)
+            pc = dryrun._compile_plan(pplan, mesh)
+            f, b = roofline.extract_cost(pc)
+            probes[d] = {"flops": f, "bytes": b,
+                         "coll": roofline.collective_bytes(pc.as_text())}
+    finally:
+        set_probe_mode(False)
+
+    trips = outer_trips(cfg)
+    f1, f2 = probes[1]["flops"], probes[2]["flops"]
+    b1, b2 = probes[1]["bytes"], probes[2]["bytes"]
+    coll = {k: max(probes[1]["coll"][k] + (trips - 1)
+                   * (probes[2]["coll"][k] - probes[1]["coll"][k]), 0)
+            for k in roofline.COLLECTIVES}
+    chips = mesh_chip_count(mesh)
+    terms = roofline.RooflineTerms(
+        flops=max(f1 + (trips - 1) * (f2 - f1), 0) * chips,
+        hbm_bytes=max(b1 + (trips - 1) * (b2 - b1), 0) * chips,
+        coll_bytes=float(sum(coll.values())) * chips,
+        chips=chips,
+        model_flops=roofline.model_flops(cfg, shape, shape.kind),
+    )
+    per_chip = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes) // chips
+    return {"roofline": terms.as_dict(), "per_chip_bytes": per_chip,
+            "collectives": coll}
+
+
+def log_iter(results, pair, name, hypothesis, rec, baseline_rec):
+    if "roofline" not in baseline_rec:  # an iteration entry — unwrap
+        baseline_rec = baseline_rec["measured"]
+    before = baseline_rec["roofline"]
+    after = rec["roofline"]
+    entry = {
+        "iteration": name,
+        "hypothesis": hypothesis,
+        "before": {k: before[k] for k in
+                   ("t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+                    "useful_flops_ratio")},
+        "after": {k: after[k] for k in
+                  ("t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+                   "useful_flops_ratio")},
+        "per_chip_gb_before": baseline_rec["per_chip_bytes"] / (1 << 30),
+        "per_chip_gb_after": rec["per_chip_bytes"] / (1 << 30),
+    }
+    dom = before["bottleneck"]
+    key = {"compute": "t_compute_s", "memory": "t_memory_s",
+           "collective": "t_collective_s"}[dom]
+    entry["dominant_term"] = dom
+    entry["dominant_before_s"] = before[key]
+    entry["dominant_after_s"] = after[key]
+    entry["improvement_x"] = (before[key] / after[key]) if after[key] else float("inf")
+    entry["verdict"] = ("confirmed" if entry["improvement_x"] > 1.05 else
+                        "refuted" if entry["improvement_x"] < 0.95 else "neutral")
+    entry["measured"] = rec
+    results.setdefault(pair, []).append(entry)
+    print(f"[{pair}] {name}: {dom} {entry['dominant_before_s']:.3f}s -> "
+          f"{entry['dominant_after_s']:.3f}s  ({entry['improvement_x']:.2f}x, "
+          f"{entry['verdict']}); GB/chip {entry['per_chip_gb_before']:.1f} -> "
+          f"{entry['per_chip_gb_after']:.1f}")
+
+
+def main():
+    mesh = make_production_mesh(multi_pod=False)
+    results = {}
+    if os.path.exists(RESULTS):
+        results = json.load(open(RESULTS))
+
+    def save():
+        os.makedirs(os.path.dirname(RESULTS), exist_ok=True)
+        json.dump(results, open(RESULTS, "w"), indent=1)
+
+    # ---- Pair 1: kimi-k2 × train_4k --------------------------------------
+    pair = "kimi-k2-1t-a32b|train_4k"
+    kimi = get_config("kimi-k2-1t-a32b")
+    if pair not in results or not results[pair]:
+        base = measure(kimi, "train_4k", mesh)
+        results.setdefault(pair, []).append({"iteration": "baseline", **base})
+        save()
+        a2a = measure(dataclasses.replace(kimi, moe_impl="a2a"), "train_4k", mesh)
+        log_iter(results, pair, "moe=a2a",
+                 "Per-layer FSDP all-gather moves E·d·f·2B = 33.8 GB of expert "
+                 "weights per chip per layer (dominates both memory and "
+                 "collective terms). Expert-sharded layout + token all-to-all "
+                 "moves only 2·T_loc·k·d·2B ≈ 15 GB of activations and keeps "
+                 "weights stationary: expect ≥2x on the dominant (memory) term "
+                 "and the 84.8 GB/chip gather buffers to disappear.",
+                 a2a, base)
+        save()
+        a2a8 = measure(dataclasses.replace(kimi, moe_impl="a2a"), "train_4k",
+                       mesh, anchor_int8=True)
+        prev = results[pair][-1]
+        log_iter(results, pair, "moe=a2a + anchor=int8",
+                 "The FedProx anchor is a full bf16 replica of the params "
+                 "(8 GB/chip for Kimi). The anchor only supplies μ(w − w_g) "
+                 "'gravity' (Eq 13) — int8 + per-tensor scale is ample, "
+                 "saving ~4 GB/chip with negligible term movement.",
+                 a2a8, prev)
+        save()
+
+    # ---- Pair 2: kimi-k2 × decode_32k ------------------------------------
+    pair = "kimi-k2-1t-a32b|decode_32k"
+    if pair not in results or not results[pair]:
+        base = measure(kimi, "decode_32k", mesh)
+        results.setdefault(pair, []).append({"iteration": "baseline", **base})
+        save()
+        a2a = measure(dataclasses.replace(kimi, moe_impl="a2a"), "decode_32k", mesh)
+        log_iter(results, pair, "moe=a2a",
+                 "Decode moves 8 tokens/chip but the gather impl still "
+                 "all-gathers 33.8 GB of expert weights per layer — weight "
+                 "traffic is ~10⁶x the activation traffic. With stationary "
+                 "experts + a2a the collective term should collapse by >10x.",
+                 a2a, base)
+        save()
+
+    # ---- Pair 3: qwen2-0.5b × train_4k ------------------------------------
+    pair = "qwen2-0.5b|train_4k"
+    qwen = get_config("qwen2-0.5b")
+    if pair not in results or not results[pair]:
+        base = measure(qwen, "train_4k", mesh)
+        results.setdefault(pair, []).append({"iteration": "baseline", **base})
+        save()
+        padded = measure(dataclasses.replace(qwen, num_heads=16, head_dim=64),
+                         "train_4k", mesh)
+        log_iter(results, pair, "heads 14->16 (padded)",
+                 "14 heads don't divide the 16-way model axis, so attention "
+                 "runs replicated on every model shard: 16x redundant compute "
+                 "= 62% of total FLOPs (useful=0.09). Padding to 16 zero-init "
+                 "heads (wo rows zero ⇒ function unchanged) shards attention "
+                 "16-way at the cost of 14% more attention math: expect "
+                 "compute term ~/2 and useful ratio → ~0.5.",
+                 padded, base)
+        save()
+
+    print(json.dumps({k: [i.get("iteration") for i in v] for k, v in results.items()},
+                     indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,257 @@
+"""Step builders for the dry-run and launchers.
+
+For every (arch × input-shape × mesh) this module produces the jitted
+step function + abstract inputs + explicit shardings:
+
+  * train_*   → ``fed_train_step``: one FedProx SGD step (params, anchor,
+                batch). Multi-pod: ``fed_round_step`` — vmap over the
+                stacked-client 'pod' axis + FedAvg mean (paper Alg. 1 line 26
+                as a cross-pod reduction).
+  * prefill_* → forward pass returning last-position logits.
+  * decode_*  → ``serve_step``: one token against a KV/state cache
+                (cache donated).
+
+Encoder-only archs have no decode (DESIGN.md §4); dense/VLM/MoE archs run
+long_500k with the sliding-window variant (window 8192).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data.synthetic import input_specs
+from repro.fed.client import fedprox_grad, sgd_step
+from repro.models.model import Model, build_model
+from repro.sharding import rules
+
+LONG_CONTEXT_WINDOW = 8192
+N_PODS = 2
+DEFAULT_MU = 0.1
+DEFAULT_LR = 0.01
+
+
+class DryRunPlan(NamedTuple):
+    fn: Any                  # callable to jit
+    args: Tuple[Any, ...]    # abstract arguments (ShapeDtypeStructs)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    note: str
+
+
+def depth_variant(cfg: ModelConfig, d: int) -> ModelConfig:
+    """Reduced-depth same-family variant for the FLOPs probe (see dryrun)."""
+    if cfg.family in ("hybrid", "vlm"):
+        every = cfg.shared_attn_every or cfg.cross_attn_every
+        return dataclasses.replace(cfg, num_layers=d * every)
+    return dataclasses.replace(cfg, num_layers=d)
+
+
+def outer_trips(cfg: ModelConfig) -> float:
+    """Outer scan trip count of the full model (per-probe-unit multiplier).
+
+    hybrid: super-blocks + tail mamba layers as a fractional super-block
+    (≤4% approximation, noted in EXPERIMENTS.md methodology).
+    """
+    if cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_super = cfg.num_layers // every
+        tail = cfg.num_layers - n_super * every
+        return n_super + tail / (every - 1)
+    if cfg.family == "vlm":
+        return cfg.num_layers // cfg.cross_attn_every
+    return float(cfg.num_layers)
+
+
+def adapt_config(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[ModelConfig, str]:
+    """Long-context policy: quadratic-attention archs get a sliding window."""
+    note = ""
+    if shape.name == "long_500k" and cfg.family in ("dense", "vlm", "moe"):
+        cfg = dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+        note = f"attn=sliding({LONG_CONTEXT_WINDOW})"
+    return cfg, note
+
+
+def supports(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """Encoder-only archs have no decode step."""
+    return not (cfg.family == "encoder" and shape.kind == "decode")
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def _spec_tokens_only(batch: Dict[str, jax.ShapeDtypeStruct]) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {k: v for k, v in batch.items() if k != "labels"}
+
+
+def build_plan(
+    cfg_full: ModelConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    *,
+    multi_pod: bool = False,
+    mu: float = DEFAULT_MU,
+    lr: float = DEFAULT_LR,
+    fsdp: Optional[bool] = None,
+    anchor_int8: bool = False,
+) -> Optional[DryRunPlan]:
+    cfg, note = adapt_config(cfg_full, shape)
+    if not supports(cfg, shape):
+        return None
+    model = build_model(cfg)
+    axes = rules.MeshAxes(pod="pod" if multi_pod else None)
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+
+    params_shape = _abstract(model.init_params, jax.random.PRNGKey(0))
+    pspecs = rules.param_specs(params_shape, cfg, mesh, axes, fsdp=fsdp)
+    pshard = rules.named(mesh, pspecs)
+
+    batch = input_specs(cfg, shape)
+
+    def batch_shard(b, lead_axes):
+        def one(leaf):
+            spec = [None] * len(leaf.shape)
+            n = 1
+            for a in lead_axes:
+                n *= rules.axis_size(mesh, a)
+            if leaf.shape and leaf.shape[0] % n == 0 and n > 1:
+                spec[0] = lead_axes if len(lead_axes) > 1 else lead_axes[0]
+            elif leaf.shape and leaf.shape[0] % rules.axis_size(mesh, "data") == 0:
+                spec[0] = "data"
+            return NamedSharding(mesh, P(*spec))
+        return jax.tree_util.tree_map(one, b)
+
+    if shape.kind == "train":
+        if not multi_pod:
+            if anchor_int8:
+                # §Perf: FedProx anchor quantized to int8 + per-tensor scale —
+                # halves the anchor's HBM (the anchor is pure "gravity", Eq 13;
+                # 8-bit precision of w_global is ample for μ(w − w_global)).
+                anchor_shape = {
+                    "q": jax.tree_util.tree_map(
+                        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.int8), params_shape),
+                    "scale": jax.tree_util.tree_map(
+                        lambda l: jax.ShapeDtypeStruct((), jnp.float32), params_shape),
+                }
+                anchor_shard = {
+                    "q": pshard,
+                    "scale": jax.tree_util.tree_map(
+                        lambda _: NamedSharding(mesh, P()), params_shape),
+                }
+
+                def fed_train_step(params, anchor, b):
+                    anchor_d = jax.tree_util.tree_map(
+                        lambda q, sc: q.astype(jnp.bfloat16) * sc.astype(jnp.bfloat16),
+                        anchor["q"], anchor["scale"])
+                    loss, grads = fedprox_grad(model.loss, params, anchor_d, b, mu, mesh=mesh)
+                    return sgd_step(params, grads, lr), loss
+
+                args = (params_shape, anchor_shape, batch)
+                in_sh = (pshard, anchor_shard, batch_shard(batch, ("data",)))
+                return DryRunPlan(fed_train_step, args, in_sh, (pshard, None), (0,),
+                                  note + " anchor=int8")
+
+            def fed_train_step(params, anchor, b):
+                loss, grads = fedprox_grad(model.loss, params, anchor, b, mu, mesh=mesh)
+                return sgd_step(params, grads, lr), loss
+
+            args = (params_shape, params_shape, batch)
+            in_sh = (pshard, pshard, batch_shard(batch, ("data",)))
+            out_sh = (pshard, None)
+            return DryRunPlan(fed_train_step, args, in_sh, out_sh, (0,), note)
+
+        # Multi-pod: pod axis = concurrent clients (stacked client params).
+        stacked = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct((N_PODS,) + l.shape, l.dtype), params_shape
+        )
+        sp_specs = rules.param_specs(stacked, cfg, mesh, axes, client_axis=True, fsdp=fsdp)
+        sp_shard = rules.named(mesh, sp_specs)
+        sbatch = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct((N_PODS,) + l.shape, l.dtype), batch
+        )
+
+        def sbatch_shard(b):
+            def one(leaf):
+                spec = [None] * len(leaf.shape)
+                spec[0] = "pod"
+                if len(leaf.shape) > 1 and leaf.shape[1] % rules.axis_size(mesh, "data") == 0:
+                    spec[1] = "data"
+                return NamedSharding(mesh, P(*spec))
+            return jax.tree_util.tree_map(one, b)
+
+        def fed_round_step(stacked_params, anchor, sb):
+            def local(p, b):
+                loss, grads = fedprox_grad(model.loss, p, anchor, b, mu, mesh=mesh)
+                return sgd_step(p, grads, lr), loss
+
+            new_params, losses = jax.vmap(local)(stacked_params, sb)
+            # FedAvg across the client (pod) axis — the round's only
+            # cross-pod collective (DESIGN.md §2).
+            global_params = jax.tree_util.tree_map(
+                lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype),
+                new_params,
+            )
+            return global_params, jnp.mean(losses)
+
+        args = (stacked, params_shape, sbatch)
+        in_sh = (sp_shard, pshard, sbatch_shard(sbatch))
+        out_sh = (pshard, None)
+        return DryRunPlan(fed_round_step, args, in_sh, out_sh, (0,), note)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, b):
+            logits = model.forward(params, b, mesh=mesh)
+            return logits[:, -1]
+
+        b = _spec_tokens_only(batch) if cfg.family != "encoder" else batch
+        args = (params_shape, b)
+        in_sh = (pshard, batch_shard(b, data_axes))
+        return DryRunPlan(prefill_step, args, in_sh, None, (), note)
+
+    # decode
+    cache_shape = _abstract(lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    cspecs = rules.cache_specs(cache_shape, cfg, mesh)
+
+    def widen_cache(spec_tree):
+        """Upgrade 'data'-sharded batch dims to ('pod','data') when divisible."""
+        if not multi_pod:
+            return spec_tree
+
+        def one(path, spec):
+            leaf = functools.reduce(
+                lambda t, p: t[getattr(p, "key", getattr(p, "idx", None))], path, cache_shape
+            )
+            new = []
+            for dim, ax in enumerate(spec):
+                if ax == "data" and leaf.shape[dim] % (N_PODS * rules.axis_size(mesh, "data")) == 0:
+                    new.append(("pod", "data"))
+                else:
+                    new.append(ax)
+            return P(*new)
+
+        flat, td = jax.tree_util.tree_flatten_with_path(
+            spec_tree, is_leaf=lambda x: isinstance(x, P))
+        return jax.tree_util.tree_unflatten(td, [one(p, s) for p, s in flat])
+
+    cspecs = widen_cache(cspecs)
+    cshard = rules.named(mesh, cspecs)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, tok, pos):
+        return model.decode_step(params, cache, tok, pos, mesh=mesh)
+
+    args = (params_shape, cache_shape, tokens, pos)
+    in_sh = (pshard, cshard,
+             batch_shard({"t": tokens}, data_axes)["t"],
+             NamedSharding(mesh, P()))
+    out_sh = (None, cshard)
+    return DryRunPlan(serve_step, args, in_sh, out_sh, (1,), note)

@@ -1,0 +1,5 @@
+"""Model zoo: 6 architecture families + ResNet-18 for the paper's experiments."""
+
+from repro.models.model import Model, build_model
+
+__all__ = ["Model", "build_model"]

@@ -1,0 +1,237 @@
+"""Attention: GQA with optional QKV bias, sliding window, cross-attn, KV cache.
+
+Prefill/train attention is *blockwise* (flash-style online softmax over KV
+chunks, fp32 accumulators) implemented in pure jnp — this is the oracle the
+Pallas kernel in ``repro.kernels.flash_attention`` is validated against, and
+it keeps HLO memory-traffic realistic for the roofline (no materialized
+S×T score matrices at 32k context).
+
+Sharding notes: all einsums keep a single flat head axis so the model axis
+shards heads cleanly when divisible (DESIGN.md §2); KV heads with
+``num_kv_heads < axis size`` stay replicated and are broadcast per chunk.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DEFAULT_DTYPE, Params, apply_rope, dense_init, probe_mode
+
+NEG_INF = -1e30
+
+
+def init_attention(
+    key: jax.Array,
+    d_model: int,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    *,
+    qkv_bias: bool = False,
+    dtype=DEFAULT_DTYPE,
+) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, (d_model, num_heads, head_dim), dtype=dtype),
+        "wk": dense_init(kk, (d_model, num_kv_heads, head_dim), dtype=dtype),
+        "wv": dense_init(kv, (d_model, num_kv_heads, head_dim), dtype=dtype),
+        "wo": dense_init(ko, (num_heads, head_dim, d_model), dtype=dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads, head_dim), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads, head_dim), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads, head_dim), dtype)
+    return p
+
+
+def qkv_project(
+    params: Params, x: jax.Array, positions: jax.Array, rope_theta: float,
+    kv_x: Optional[jax.Array] = None, kv_positions: Optional[jax.Array] = None,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project to q [B,S,H,D], k/v [B,T,KVH,D]; apply RoPE to q,k."""
+    src = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", src, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", src, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        kpos = positions if kv_positions is None else kv_positions
+        k = apply_rope(k, kpos, rope_theta)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """Broadcast KV heads to the full head count (GQA)."""
+    kvh = k.shape[-2]
+    if kvh == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // kvh, axis=-2)
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    window: int = 0,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style attention: online softmax over KV chunks, fp32 state.
+
+    q: (B,S,H,D); k,v: (B,T,KVH,D). Returns (B,S,H,D) in q.dtype.
+    ``window > 0`` restricts to a causal sliding window.
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    if probe_mode():
+        # cap unrolled chunk copies at 8 so probe compiles stay small while
+        # attention FLOPs are still fully counted (see layers.set_probe_mode)
+        kv_chunk = max(kv_chunk, -(-t // 8))
+    kv_chunk = min(kv_chunk, t)
+    n_chunks = -(-t // kv_chunk)
+    pad_t = n_chunks * kv_chunk
+    if pad_t != t:
+        pad = [(0, 0), (0, pad_t - t), (0, 0), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    kc = _expand_kv(k, h).reshape(b, n_chunks, kv_chunk, h, d)
+    vc = _expand_kv(v, h).reshape(b, n_chunks, kv_chunk, h, d)
+
+    scale = 1.0 / (d ** 0.5)
+    qf = (q.astype(jnp.float32) * scale)
+    q_pos = q_offset + jnp.arange(s)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        k_i, v_i, idx = inp
+        k_pos = idx * kv_chunk + jnp.arange(kv_chunk)
+        s_ij = jnp.einsum("bshd,bthd->bhst", qf, k_i.astype(jnp.float32))
+        mask = k_pos[None, :] < t  # drop padding
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s_ij = jnp.where(mask[None, None], s_ij, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+        p = jnp.exp(s_ij - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthd->bshd", p, v_i.astype(jnp.float32)
+        ).transpose(0, 2, 1, 3)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), jnp.arange(n_chunks)),
+        unroll=n_chunks if probe_mode() else 1,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B,S,H,D)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len: jax.Array,
+    *,
+    ring: bool = False,
+) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q: (B,1,H,D); caches: (B,T,KVH,D). ``cur_len`` = number of valid
+    positions. With ``ring=True`` the cache is a ring buffer (sliding
+    window) and every slot < min(cur_len, T) is valid.
+    """
+    b, _, h, d = q.shape
+    t = k_cache.shape[1]
+    kvh = k_cache.shape[2]
+    # GQA without materializing the KVH->H broadcast: the repeat would force
+    # GSPMD to re-shard (replicate!) a sequence- or head-sharded cache every
+    # layer (measured 1.9 GB/layer on kimi decode_32k — see §Perf pair 2).
+    g = h // kvh
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    qf = (q.astype(jnp.float32) * (1.0 / d**0.5)).reshape(b, 1, kvh, g, d)
+    s = jnp.einsum("bskgd,btkd->bkgst", qf, kf)  # (B,KVH,G,1,T)
+    limit = jnp.minimum(cur_len, t) if ring else cur_len
+    valid = jnp.arange(t)[None, None, None, None, :] < limit
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, vf).reshape(b, 1, h, d)
+    return out.astype(q.dtype)
+
+
+def attention_block(
+    params: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    rope_theta: float,
+    causal: bool = True,
+    window: int = 0,
+    kv_x: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    use_rope: bool = True,
+) -> jax.Array:
+    """Full attention sub-layer (projections + blockwise attn + out proj)."""
+    q, k, v = qkv_project(params, x, positions, rope_theta,
+                          kv_x=kv_x, kv_positions=kv_positions, use_rope=use_rope)
+    o = blockwise_attention(q, k, v, causal=causal and kv_x is None, window=window)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+def init_kv_cache(
+    num_layers: int, batch: int, max_len: int, num_kv_heads: int, head_dim: int,
+    dtype=DEFAULT_DTYPE,
+) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((num_layers, batch, max_len, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((num_layers, batch, max_len, num_kv_heads, head_dim), dtype),
+    }
+
+
+def cache_write(cache_k: jax.Array, cache_v: jax.Array, k: jax.Array, v: jax.Array,
+                pos: jax.Array, *, ring: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Write one token's k/v (B,1,KVH,D) at ``pos`` (ring ⇒ pos % T)."""
+    t = cache_k.shape[1]
+    slot = jnp.where(ring, pos % t, pos) if ring else pos
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    return ck, cv
+
+
+def decode_attention_block(
+    params: Params,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    pos: jax.Array,
+    *,
+    rope_theta: float,
+    ring: bool = False,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention sub-layer with functional cache update."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = qkv_project(params, x, positions, rope_theta, use_rope=use_rope)
+    ck, cv = cache_write(cache_k, cache_v, k, v, pos, ring=ring)
+    o = decode_attention(q, ck, cv, pos + 1, ring=ring)
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return y, ck, cv

@@ -1,0 +1,133 @@
+"""Dense llama-family decoder (qwen2 / minicpm / yi / llama3-405b).
+
+Pre-norm GQA transformer with SwiGLU MLP, RoPE, optional QKV bias and
+sliding-window attention (the long-context variant used for long_500k on
+dense archs — DESIGN.md §4). Layers are stacked and run under ``lax.scan``
+with optional per-layer remat so 126-layer configs lower to compact HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    DEFAULT_DTYPE,
+    Params,
+    cross_entropy,
+    embed_tokens,
+    gated_mlp,
+    init_embeddings,
+    init_gated_mlp,
+    rms_norm,
+    scan_layers,
+    unembed,
+)
+
+
+def init_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": attn.init_attention(
+            k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+            qkv_bias=cfg.qkv_bias,
+        ),
+        "mlp": init_gated_mlp(k2, cfg.d_model, cfg.d_ff),
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    ke, kl = jax.random.split(key)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "embed": init_embeddings(ke, cfg.padded_vocab, cfg.d_model, cfg.tie_embeddings),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def _layer_body(cfg: ModelConfig, x: jax.Array, positions: jax.Array, lp: Params) -> jax.Array:
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + attn.attention_block(
+        lp["attn"], h, positions,
+        rope_theta=cfg.rope_theta, causal=True, window=cfg.sliding_window,
+    )
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    return x + gated_mlp(lp["mlp"], h)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            remat: bool = True) -> jax.Array:
+    """Token ids (B,S) → logits (B,S,V_padded)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed_tokens(params["embed"], tokens).astype(DEFAULT_DTYPE)
+
+    body = functools.partial(_layer_body, cfg)
+    if remat:
+        body = jax.checkpoint(body, static_argnums=())
+
+    def scan_fn(carry, lp):
+        return body(carry, positions, lp), None
+
+    x, _ = scan_layers(scan_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg.vocab_size)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"], remat=cfg.remat)
+    return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def cache_len(cfg: ModelConfig, max_len: int) -> int:
+    """Effective cache length: the sliding window bounds it when set."""
+    return min(cfg.sliding_window, max_len) if cfg.sliding_window else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, jax.Array]:
+    return attn.init_kv_cache(
+        cfg.num_layers, batch, cache_len(cfg, max_len),
+        cfg.num_kv_heads, cfg.resolved_head_dim,
+    )
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,
+    pos: jax.Array,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step: tokens (B,1) at position ``pos`` → (logits, cache')."""
+    ring = bool(cfg.sliding_window)
+    x = embed_tokens(params["embed"], tokens).astype(DEFAULT_DTYPE)
+
+    def scan_fn(x, inp):
+        lp, ck, cv = inp
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, ck, cv = attn.decode_attention_block(
+            lp["attn"], h, ck, cv, pos, rope_theta=cfg.rope_theta, ring=ring,
+        )
+        x = x + y
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + gated_mlp(lp["mlp"], h)
+        return x, (ck, cv)
+
+    x, (ck, cv) = scan_layers(scan_fn, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.vocab_size)
+    return logits, {"k": ck, "v": cv}

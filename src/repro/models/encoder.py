@@ -1,0 +1,92 @@
+"""HuBERT-style encoder-only audio transformer [arXiv:2106.07447].
+
+The conv/mel frontend is a STUB per the brief: the data pipeline provides
+precomputed frame embeddings (B, S, d_model). Training objective is masked
+prediction over ``vocab_size`` (=504) cluster targets: masked frames are
+replaced by a learned mask embedding and CE is computed on masked positions.
+Attention is bidirectional (non-causal); no decode step exists (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    DEFAULT_DTYPE,
+    Params,
+    cross_entropy,
+    dense_init,
+    gated_mlp,
+    init_gated_mlp,
+    rms_norm,
+    scan_layers,
+)
+
+
+def init_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": attn.init_attention(
+            k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+        ),
+        "mlp": init_gated_mlp(k2, cfg.d_model, cfg.d_ff),
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    km, kl, kp = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {
+        "mask_embed": jax.random.normal(km, (cfg.d_model,), jnp.float32) * 0.02,
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "head": dense_init(kp, (cfg.d_model, cfg.padded_vocab), dtype=DEFAULT_DTYPE),
+    }
+
+
+def forward(cfg: ModelConfig, params: Params, frames: jax.Array,
+            mask: jax.Array | None = None, *, remat: bool = True) -> jax.Array:
+    """frames: (B,S,d) stub embeddings; mask: (B,S) bool masked positions."""
+    b, s, _ = frames.shape
+    x = frames.astype(DEFAULT_DTYPE)
+    if mask is not None:
+        x = jnp.where(mask[..., None], params["mask_embed"].astype(DEFAULT_DTYPE), x)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + attn.attention_block(
+            lp["attn"], h, positions, rope_theta=cfg.rope_theta, causal=False,
+        )
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + gated_mlp(lp["mlp"], h)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(carry, lp):
+        return body(carry, lp), None
+
+    x, _ = scan_layers(scan_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    pad = logits.shape[-1]
+    if pad > cfg.vocab_size:
+        vmask = jnp.arange(pad) < cfg.vocab_size
+        logits = jnp.where(vmask, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Masked-prediction CE on masked positions only."""
+    logits = forward(cfg, params, batch["frames"], batch["mask"], remat=cfg.remat)
+    return cross_entropy(logits, batch["labels"], mask=batch["mask"])

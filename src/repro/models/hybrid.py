@@ -1,0 +1,188 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+applied every ``shared_attn_every`` layers [arXiv:2411.15242].
+
+Layer pattern for L=81, every=6 (1-indexed): layers 6,12,…,78 are the shared
+attention block (weights reused across all 13 applications, each with its own
+KV cache), the remaining 68 are Mamba2 blocks. We scan over 13 super-blocks
+of (5 mamba + 1 shared attn) and finish with the 3 trailing mamba layers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.layers import (
+    DEFAULT_DTYPE,
+    Params,
+    cross_entropy,
+    embed_tokens,
+    gated_mlp,
+    init_embeddings,
+    init_gated_mlp,
+    rms_norm,
+    scan_layers,
+    unembed,
+)
+
+
+def layer_plan(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_super, mamba_per_super, n_tail_mamba)."""
+    every = cfg.shared_attn_every
+    n_super = cfg.num_layers // every
+    tail = cfg.num_layers - n_super * every
+    return n_super, every - 1, tail
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    n_super, per, tail = layer_plan(cfg)
+    ke, km, kt, ka, kf = jax.random.split(key, 5)
+
+    def init_mamba_layer(k):
+        return mamba2.init_layer(k, cfg)
+
+    mkeys = jax.random.split(km, n_super * per).reshape(n_super, per, 2)
+    super_mamba = jax.vmap(jax.vmap(init_mamba_layer))(mkeys)
+    tail_mamba = jax.vmap(init_mamba_layer)(jax.random.split(kt, max(tail, 1)))
+
+    k1, k2 = jax.random.split(ka)
+    shared = {
+        "attn": attn.init_attention(
+            k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+        ),
+        "mlp": init_gated_mlp(k2, cfg.d_model, cfg.d_ff),
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    return {
+        "embed": init_embeddings(ke, cfg.padded_vocab, cfg.d_model, cfg.tie_embeddings),
+        "super_mamba": super_mamba,   # [n_super, per, ...]
+        "tail_mamba": tail_mamba,     # [tail, ...]
+        "shared_attn": shared,        # single block, reused
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def _mamba_sub(cfg, x, lp):
+    h = rms_norm(x, lp["ln"], cfg.norm_eps)
+    return x + mamba2.block_forward(cfg, lp["block"], h)
+
+
+def _attn_sub(cfg, x, positions, sp):
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    x = x + attn.attention_block(
+        sp["attn"], h, positions,
+        rope_theta=cfg.rope_theta, causal=True, window=cfg.sliding_window,
+    )
+    h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return x + gated_mlp(sp["mlp"], h)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            remat: bool = True) -> jax.Array:
+    _, _, tail = layer_plan(cfg)
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed_tokens(params["embed"], tokens).astype(DEFAULT_DTYPE)
+    shared = params["shared_attn"]
+
+    def super_body(x, mlp_stack):
+        def inner(x2, lp):
+            return _mamba_sub(cfg, x2, lp), None
+        x, _ = scan_layers(inner, x, mlp_stack, inner=True)
+        return _attn_sub(cfg, x, positions, shared)
+
+    if remat:
+        super_body = jax.checkpoint(super_body)
+
+    def scan_fn(carry, mlp_stack):
+        return super_body(carry, mlp_stack), None
+
+    x, _ = scan_layers(scan_fn, x, params["super_mamba"])
+    if tail:
+        def tail_fn(carry, lp):
+            return _mamba_sub(cfg, carry, lp), None
+        x, _ = scan_layers(tail_fn, x, params["tail_mamba"], inner=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg.vocab_size)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"], remat=cfg.remat)
+    return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, jax.Array]:
+    n_super, per, tail = layer_plan(cfg)
+    di, n, nh = mamba2.block_dims(cfg)
+    km1 = mamba2.CONV_K - 1
+    t = min(cfg.sliding_window, max_len) if cfg.sliding_window else max_len
+    return {
+        "super_conv_x": jnp.zeros((n_super, per, batch, km1, di), DEFAULT_DTYPE),
+        "super_conv_bc": jnp.zeros((n_super, per, batch, km1, 2 * n), DEFAULT_DTYPE),
+        "super_ssm": jnp.zeros((n_super, per, batch, nh, cfg.ssm_headdim, n), jnp.float32),
+        "tail_conv_x": jnp.zeros((max(tail, 1), batch, km1, di), DEFAULT_DTYPE),
+        "tail_conv_bc": jnp.zeros((max(tail, 1), batch, km1, 2 * n), DEFAULT_DTYPE),
+        "tail_ssm": jnp.zeros((max(tail, 1), batch, nh, cfg.ssm_headdim, n), jnp.float32),
+        "attn_k": jnp.zeros((n_super, batch, t, cfg.num_kv_heads, cfg.resolved_head_dim), DEFAULT_DTYPE),
+        "attn_v": jnp.zeros((n_super, batch, t, cfg.num_kv_heads, cfg.resolved_head_dim), DEFAULT_DTYPE),
+    }
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,
+    pos: jax.Array,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    _, _, tail = layer_plan(cfg)
+    ring = bool(cfg.sliding_window)
+    x = embed_tokens(params["embed"], tokens).astype(DEFAULT_DTYPE)
+    shared = params["shared_attn"]
+
+    def mamba_step(x, inp):
+        lp, cx, cbc, ss = inp
+        h = rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, cx, cbc, ss = mamba2.block_decode(cfg, lp["block"], h, cx, cbc, ss)
+        return x + y, (cx, cbc, ss)
+
+    def super_step(x, inp):
+        mstack, cx, cbc, ss, ck, cv = inp
+        x, (cx, cbc, ss) = scan_layers(mamba_step, x, (mstack, cx, cbc, ss), inner=True)
+        h = rms_norm(x, shared["ln1"], cfg.norm_eps)
+        y, ck, cv = attn.decode_attention_block(
+            shared["attn"], h, ck, cv, pos, rope_theta=cfg.rope_theta, ring=ring,
+        )
+        x = x + y
+        h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+        x = x + gated_mlp(shared["mlp"], h)
+        return x, (cx, cbc, ss, ck, cv)
+
+    x, (scx, scbc, sss, ck, cv) = scan_layers(
+        super_step, x,
+        (params["super_mamba"], cache["super_conv_x"], cache["super_conv_bc"],
+         cache["super_ssm"], cache["attn_k"], cache["attn_v"]),
+    )
+    tcx, tcbc, tss = cache["tail_conv_x"], cache["tail_conv_bc"], cache["tail_ssm"]
+    if tail:
+        x, (tcx, tcbc, tss) = scan_layers(
+            mamba_step, x, (params["tail_mamba"], tcx, tcbc, tss), inner=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.vocab_size)
+    return logits, {
+        "super_conv_x": scx, "super_conv_bc": scbc, "super_ssm": sss,
+        "tail_conv_x": tcx, "tail_conv_bc": tcbc, "tail_ssm": tss,
+        "attn_k": ck, "attn_v": cv,
+    }

@@ -1,0 +1,184 @@
+"""Shared building blocks: norms, RoPE, embeddings, gated MLP, initializers.
+
+All modules are pure functions over explicit param pytrees (nested dicts of
+arrays). Per-layer parameters are *stacked on a leading layer axis* by the
+model definitions so the decoders run as ``lax.scan`` over layers — this
+keeps HLO size O(1) in depth, which matters for the 126-layer dry-runs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jax.Array]
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+# ---------------------------------------------------------------------------
+# Scan control — FLOPs-probe mode for the dry-run
+#
+# XLA's cost_analysis counts a while-loop (lax.scan) body ONCE, independent of
+# trip count. The dry-run therefore compiles reduced-depth model variants with
+# every scan fully unrolled ("probe mode"), fits f(depth) = out + depth*body
+# exactly, and extrapolates to the real depth (launch/dryrun.py). Production
+# execution always uses scan (compact HLO).
+# ---------------------------------------------------------------------------
+
+_PROBE_MODE = False
+
+
+def set_probe_mode(enabled: bool) -> None:
+    global _PROBE_MODE
+    _PROBE_MODE = enabled
+
+
+def probe_mode() -> bool:
+    return _PROBE_MODE
+
+
+def scan_layers(f, init, xs, *, inner: bool = False):
+    """lax.scan over stacked layer params; fully unrolled in probe mode."""
+    length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    unroll = length if _PROBE_MODE else 1
+    return jax.lax.scan(f, init, xs, unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, shape, in_axis: int = 0, dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init (LeCun-ish), stored fp32, cast at use."""
+    fan_in = shape[in_axis]
+    std = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, (vocab, dim), jnp.float32).astype(dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm in fp32 accumulation, output in input dtype."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def group_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, groups: int = 8,
+               eps: float = 1e-5) -> jax.Array:
+    """GroupNorm over the channel (last) axis of NHWC tensors."""
+    dt = x.dtype
+    b, h, w, c = x.shape
+    xf = x.astype(jnp.float32).reshape(b, h, w, groups, c // groups)
+    mu = jnp.mean(xf, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xf, axis=(1, 2, 4), keepdims=True)
+    y = ((xf - mu) * jax.lax.rsqrt(var + eps)).reshape(b, h, w, c)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim/2,), fp32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate q/k. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_gated_mlp(key: jax.Array, d_model: int, d_ff: int, dtype=DEFAULT_DTYPE) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype=dtype),
+    }
+
+
+def gated_mlp(params: Params, x: jax.Array) -> jax.Array:
+    """SwiGLU: down( silu(gate(x)) * up(x) )."""
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embeddings(key: jax.Array, padded_vocab: int, d_model: int, tie: bool,
+                    dtype=DEFAULT_DTYPE) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"tok_embed": embed_init(k1, padded_vocab, d_model, dtype=dtype)}
+    if not tie:
+        p["unembed"] = dense_init(k2, (d_model, padded_vocab), dtype=dtype)
+    return p
+
+
+def embed_tokens(params: Params, tokens: jax.Array) -> jax.Array:
+    return params["tok_embed"][tokens]
+
+
+def unembed(params: Params, x: jax.Array, vocab_size: int) -> jax.Array:
+    """Logits over the *padded* vocab, with padding positions masked to -inf."""
+    if "unembed" in params:
+        logits = jnp.einsum("...d,dv->...v", x, params["unembed"])
+    else:
+        logits = jnp.einsum("...d,vd->...v", x, params["tok_embed"])
+    padded = logits.shape[-1]
+    if padded > vocab_size:
+        mask = jnp.arange(padded) < vocab_size
+        logits = jnp.where(mask, logits, jnp.finfo(logits.dtype).min)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token CE in fp32. labels: int ids; mask optional weights."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

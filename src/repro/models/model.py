@@ -1,0 +1,104 @@
+"""Uniform model facade: ``build_model(cfg)`` dispatches to the family impl.
+
+Every family exposes the same surface so the federated loop, launcher and
+dry-run treat architectures interchangeably:
+
+  init_params(key)                        → params pytree
+  loss(params, batch, mesh=None)          → scalar fp32 loss   (train step)
+  forward(params, batch, mesh=None)       → logits             (prefill)
+  init_cache(batch, max_len)              → cache pytree       (decode archs)
+  decode_step(params, cache, tok, pos, mesh=None) → (logits, cache)
+  has_decode                              → encoder-only archs return False
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import dense, encoder, hybrid, mamba2, moe, resnet, vlm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], Any]
+    loss: Callable[..., jax.Array]
+    forward: Callable[..., jax.Array]
+    init_cache: Optional[Callable[[int, int], Any]]
+    decode_step: Optional[Callable[..., Any]]
+
+    @property
+    def has_decode(self) -> bool:
+        return self.decode_step is not None
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    f = cfg.family
+    if f == "dense":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: dense.init_params(key, cfg),
+            loss=lambda p, b, mesh=None: dense.loss_fn(cfg, p, b),
+            forward=lambda p, b, mesh=None: dense.forward(cfg, p, b["tokens"], remat=False),
+            init_cache=lambda batch, max_len: dense.init_cache(cfg, batch, max_len),
+            decode_step=lambda p, c, t, pos, mesh=None: dense.decode_step(cfg, p, c, t, pos),
+        )
+    if f == "moe":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: moe.init_params(key, cfg),
+            loss=lambda p, b, mesh=None: moe.loss_fn(cfg, p, b, mesh=mesh),
+            forward=lambda p, b, mesh=None: moe.forward(cfg, p, b["tokens"], mesh=mesh, remat=False)[0],
+            init_cache=lambda batch, max_len: moe.init_cache(cfg, batch, max_len),
+            decode_step=lambda p, c, t, pos, mesh=None: moe.decode_step(cfg, p, c, t, pos, mesh=mesh),
+        )
+    if f == "ssm":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: mamba2.init_params(key, cfg),
+            loss=lambda p, b, mesh=None: mamba2.loss_fn(cfg, p, b),
+            forward=lambda p, b, mesh=None: mamba2.forward(cfg, p, b["tokens"], remat=False),
+            init_cache=lambda batch, max_len: mamba2.init_cache(cfg, batch, max_len),
+            decode_step=lambda p, c, t, pos, mesh=None: mamba2.decode_step(cfg, p, c, t, pos),
+        )
+    if f == "hybrid":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: hybrid.init_params(key, cfg),
+            loss=lambda p, b, mesh=None: hybrid.loss_fn(cfg, p, b),
+            forward=lambda p, b, mesh=None: hybrid.forward(cfg, p, b["tokens"], remat=False),
+            init_cache=lambda batch, max_len: hybrid.init_cache(cfg, batch, max_len),
+            decode_step=lambda p, c, t, pos, mesh=None: hybrid.decode_step(cfg, p, c, t, pos),
+        )
+    if f == "encoder":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: encoder.init_params(key, cfg),
+            loss=lambda p, b, mesh=None: encoder.loss_fn(cfg, p, b),
+            forward=lambda p, b, mesh=None: encoder.forward(cfg, p, b["frames"], remat=False),
+            init_cache=None,
+            decode_step=None,
+        )
+    if f == "vlm":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: vlm.init_params(key, cfg),
+            loss=lambda p, b, mesh=None: vlm.loss_fn(cfg, p, b),
+            forward=lambda p, b, mesh=None: vlm.forward(cfg, p, b["tokens"], b["vision_embeds"], remat=False),
+            init_cache=lambda batch, max_len: vlm.init_cache(cfg, batch, max_len),
+            decode_step=lambda p, c, t, pos, mesh=None: vlm.decode_step(cfg, p, c, t, pos),
+        )
+    if f == "resnet":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: resnet.init_params(key, cfg),
+            loss=lambda p, b, mesh=None: resnet.loss_fn(cfg, p, b),
+            forward=lambda p, b, mesh=None: resnet.forward(cfg, p, b["images"]),
+            init_cache=None,
+            decode_step=None,
+        )
+    raise ValueError(f"unknown family '{f}'")

@@ -1,0 +1,111 @@
+"""ResNet-18 (CIFAR variant) — the paper's own experimental model (Sec IV).
+
+GroupNorm replaces BatchNorm: BN statistics are incoherent across non-IID
+federated silos (DESIGN.md §2); GN is stateless so client updates stay pure
+parameter deltas — exactly what FedAvg/FedProx aggregation assumes.
+
+Pure-functional NHWC convnet: stem 3×3 (CIFAR), 4 stages × 2 basic blocks,
+widths (w, 2w, 4w, 8w) with w = cfg.d_model (64 for the paper config).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, group_norm
+
+
+def _conv_init(key: jax.Array, k: int, cin: int, cout: int) -> jax.Array:
+    fan_in = k * k * cin
+    std = (2.0 / fan_in) ** 0.5
+    return jax.random.normal(key, (k, k, cin, cout), jnp.float32) * std
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _gn_params(c: int) -> Dict[str, jax.Array]:
+    return {"scale": jnp.ones((c,), jnp.float32), "bias": jnp.zeros((c,), jnp.float32)}
+
+
+def _init_block(key: jax.Array, cin: int, cout: int, stride: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "conv1": _conv_init(k1, 3, cin, cout),
+        "gn1": _gn_params(cout),
+        "conv2": _conv_init(k2, 3, cout, cout),
+        "gn2": _gn_params(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = _conv_init(k3, 1, cin, cout)
+        p["gn_proj"] = _gn_params(cout)
+    return p
+
+
+def _block(p: Params, x: jax.Array, stride: int) -> jax.Array:
+    y = _conv(x, p["conv1"], stride)
+    y = jax.nn.relu(group_norm(y, p["gn1"]["scale"], p["gn1"]["bias"]))
+    y = _conv(y, p["conv2"])
+    y = group_norm(y, p["gn2"]["scale"], p["gn2"]["bias"])
+    if "proj" in p:
+        x = group_norm(_conv(x, p["proj"], stride), p["gn_proj"]["scale"], p["gn_proj"]["bias"])
+    return jax.nn.relu(x + y)
+
+
+_STAGES = ((1, 1), (2, 1), (2, 1), (2, 1))  # (first-block stride, second stride)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    w = cfg.d_model  # base width (64)
+    keys = jax.random.split(key, 11)
+    params: Params = {
+        "stem": _conv_init(keys[0], 3, 3, w),
+        "gn_stem": _gn_params(w),
+    }
+    cin = w
+    ki = 1
+    blocks: List[Params] = []
+    for stage, (s1, s2) in enumerate(_STAGES):
+        cout = w * (2 ** stage)
+        blocks.append(_init_block(keys[ki], cin, cout, s1)); ki += 1
+        blocks.append(_init_block(keys[ki], cout, cout, s2)); ki += 1
+        cin = cout
+    for i, b in enumerate(blocks):
+        params[f"block{i}"] = b
+    params["fc_w"] = jax.random.normal(keys[ki], (cin, cfg.num_classes), jnp.float32) * (1.0 / cin**0.5)
+    params["fc_b"] = jnp.zeros((cfg.num_classes,), jnp.float32)
+    return params
+
+
+def forward(cfg: ModelConfig, params: Params, images: jax.Array) -> jax.Array:
+    """images: (B,H,W,3) float → logits (B, num_classes)."""
+    x = images.astype(jnp.float32)
+    x = _conv(x, params["stem"])
+    x = jax.nn.relu(group_norm(x, params["gn_stem"]["scale"], params["gn_stem"]["bias"]))
+    i = 0
+    for s1, s2 in _STAGES:
+        x = _block(params[f"block{i}"], x, s1); i += 1
+        x = _block(params[f"block{i}"], x, s2); i += 1
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["fc_w"] + params["fc_b"]
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    logits = forward(cfg, params, batch["images"]).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    logits = forward(cfg, params, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))

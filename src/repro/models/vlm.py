@@ -1,0 +1,187 @@
+"""Llama-3.2-Vision-style VLM decoder: self-attn layers + gated cross-attn
+image layers every ``cross_attn_every`` layers [hf:meta-llama/Llama-3.2-*-Vision].
+
+The vision tower (ViT + projector) is a STUB per the brief: ``input_specs``
+provides projected patch embeddings (B, vision_tokens, d_model). We implement
+the language side faithfully: L layers grouped into super-blocks of
+(cross_attn_every − 1 self layers + 1 gated cross-attn layer), tanh-gated
+residuals on the cross-attn path (zero-init gates, as in the reference
+implementation).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import dense as dense_model
+from repro.models.layers import (
+    DEFAULT_DTYPE,
+    Params,
+    cross_entropy,
+    embed_tokens,
+    gated_mlp,
+    init_embeddings,
+    init_gated_mlp,
+    rms_norm,
+    scan_layers,
+    unembed,
+)
+
+
+def layer_plan(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_super, self_per_super). num_layers must be divisible by the period."""
+    every = cfg.cross_attn_every
+    assert cfg.num_layers % every == 0, "vlm layers must tile into super-blocks"
+    return cfg.num_layers // every, every - 1
+
+
+def _init_cross_layer(key: jax.Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": attn.init_attention(
+            k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+        ),
+        "mlp": init_gated_mlp(k2, cfg.d_model, cfg.d_ff),
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    n_super, per = layer_plan(cfg)
+    ke, ks, kc = jax.random.split(key, 3)
+    skeys = jax.random.split(ks, n_super * per).reshape(n_super, per, 2)
+    self_layers = jax.vmap(jax.vmap(lambda k: dense_model.init_layer(k, cfg)))(skeys)
+    ckeys = jax.random.split(kc, n_super)
+    cross_layers = jax.vmap(lambda k: _init_cross_layer(k, cfg))(ckeys)
+    return {
+        "embed": init_embeddings(ke, cfg.padded_vocab, cfg.d_model, cfg.tie_embeddings),
+        "self_layers": self_layers,    # [n_super, per, ...]
+        "cross_layers": cross_layers,  # [n_super, ...]
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def _cross_sub(cfg, x, positions, cp, vision):
+    h = rms_norm(x, cp["ln1"], cfg.norm_eps)
+    y = attn.attention_block(
+        cp["attn"], h, positions, rope_theta=cfg.rope_theta,
+        causal=False, kv_x=vision, use_rope=False,
+    )
+    x = x + jnp.tanh(cp["gate_attn"]).astype(y.dtype) * y
+    h = rms_norm(x, cp["ln2"], cfg.norm_eps)
+    return x + jnp.tanh(cp["gate_mlp"]).astype(x.dtype) * gated_mlp(cp["mlp"], h)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            vision_embeds: jax.Array, *, remat: bool = True) -> jax.Array:
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = embed_tokens(params["embed"], tokens).astype(DEFAULT_DTYPE)
+    vision = vision_embeds.astype(DEFAULT_DTYPE)
+
+    def super_body(x, inp):
+        self_stack, cp = inp
+
+        def inner(x2, lp):
+            return dense_model._layer_body(cfg, x2, positions, lp), None
+
+        x, _ = scan_layers(inner, x, self_stack, inner=True)
+        return _cross_sub(cfg, x, positions, cp, vision)
+
+    if remat:
+        super_body = jax.checkpoint(super_body)
+
+    def scan_fn(carry, inp):
+        return super_body(carry, inp), None
+
+    x, _ = scan_layers(scan_fn, x, (params["self_layers"], params["cross_layers"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg.vocab_size)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+    logits = forward(cfg, params, batch["tokens"], batch["vision_embeds"], remat=cfg.remat)
+    return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# Decode — self-attn KV caches + static cross-attn KV (computed at prefill)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, jax.Array]:
+    n_super, per = layer_plan(cfg)
+    t = min(cfg.sliding_window, max_len) if cfg.sliding_window else max_len
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((n_super, per, batch, t, kvh, hd), DEFAULT_DTYPE),
+        "v": jnp.zeros((n_super, per, batch, t, kvh, hd), DEFAULT_DTYPE),
+        # Cross-attn KV over vision tokens: computed once, read every step.
+        "xk": jnp.zeros((n_super, batch, cfg.vision_tokens, kvh, hd), DEFAULT_DTYPE),
+        "xv": jnp.zeros((n_super, batch, cfg.vision_tokens, kvh, hd), DEFAULT_DTYPE),
+    }
+
+
+def warm_cross_cache(cfg: ModelConfig, params: Params, cache: Dict[str, jax.Array],
+                     vision_embeds: jax.Array) -> Dict[str, jax.Array]:
+    """Precompute cross-attn K/V from vision embeddings for every cross layer."""
+    vision = vision_embeds.astype(DEFAULT_DTYPE)
+
+    def one(cp):
+        k = jnp.einsum("btd,dhk->bthk", vision, cp["attn"]["wk"])
+        v = jnp.einsum("btd,dhk->bthk", vision, cp["attn"]["wv"])
+        return k, v
+
+    xk, xv = jax.vmap(one)(params["cross_layers"])
+    return dict(cache, xk=xk.astype(DEFAULT_DTYPE), xv=xv.astype(DEFAULT_DTYPE))
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,
+    pos: jax.Array,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    ring = bool(cfg.sliding_window)
+    x = embed_tokens(params["embed"], tokens).astype(DEFAULT_DTYPE)
+
+    def self_step(x, inp):
+        lp, ck, cv = inp
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, ck, cv = attn.decode_attention_block(
+            lp["attn"], h, ck, cv, pos, rope_theta=cfg.rope_theta, ring=ring,
+        )
+        x = x + y
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + gated_mlp(lp["mlp"], h), (ck, cv)
+
+    def super_step(x, inp):
+        self_stack, cp, ck, cv, xk, xv = inp
+        x, (ck, cv) = scan_layers(self_step, x, (self_stack, ck, cv), inner=True)
+        h = rms_norm(x, cp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, cp["attn"]["wq"])
+        o = attn.decode_attention(q, xk, xv, jnp.int32(cfg.vision_tokens))
+        y = jnp.einsum("bshk,hkd->bsd", o, cp["attn"]["wo"])
+        x = x + jnp.tanh(cp["gate_attn"]).astype(y.dtype) * y
+        h = rms_norm(x, cp["ln2"], cfg.norm_eps)
+        x = x + jnp.tanh(cp["gate_mlp"]).astype(x.dtype) * gated_mlp(cp["mlp"], h)
+        return x, (ck, cv)
+
+    x, (ck, cv) = scan_layers(
+        super_step, x,
+        (params["self_layers"], params["cross_layers"],
+         cache["k"], cache["v"], cache["xk"], cache["xv"]),
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg.vocab_size)
+    return logits, dict(cache, k=ck, v=cv)

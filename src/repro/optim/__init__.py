@@ -1,0 +1,6 @@
+"""Optimizers and LR schedules (incl. MiniCPM's WSD)."""
+
+from repro.optim.sgd import sgd, adamw, OptState
+from repro.optim.schedules import constant, cosine, wsd, SCHEDULES
+
+__all__ = ["sgd", "adamw", "OptState", "constant", "cosine", "wsd", "SCHEDULES"]

@@ -1,0 +1,38 @@
+"""LR schedules: constant, cosine, and WSD (Warmup-Stable-Decay, MiniCPM
+[arXiv:2404.06395] — the schedule the minicpm-2b config cites)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * warm * cos
+    return fn
+
+
+def wsd(lr: float, total_steps: int, warmup_frac: float = 0.01, decay_frac: float = 0.1,
+        final_frac: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup → flat → sharp (exponential) decay."""
+    warmup = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / warmup, 1.0)
+        in_decay = jnp.maximum(step - decay_start, 0.0) / jnp.maximum(total_steps - decay_start, 1)
+        decay = jnp.power(jnp.float32(final_frac), jnp.clip(in_decay, 0.0, 1.0))
+        return jnp.float32(lr) * warm * decay
+    return fn
+
+
+SCHEDULES = {"constant": constant, "cosine": cosine, "wsd": wsd}

@@ -1,0 +1,65 @@
+"""Optimizers for server-side / centralized training paths.
+
+FedProx local steps are optimizer-state-free SGD (fed/client.py); these are
+for the centralized baselines and the beyond-paper server optimizers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any        # momentum / first moment (or None-like zeros)
+    nu: Any        # second moment (adamw only)
+
+
+def sgd(lr_fn: Callable, momentum: float = 0.0):
+    def init(params):
+        mu = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params) \
+            if momentum else None
+        return OptState(jnp.int32(0), mu, None)
+
+    def update(grads, state, params):
+        lr = lr_fn(state.step)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads)
+            upd = mu
+        else:
+            mu = None
+            upd = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        new = jax.tree_util.tree_map(
+            lambda p, u: (p.astype(jnp.float32) - lr * u).astype(p.dtype), params, upd)
+        return new, OptState(state.step + 1, mu, None)
+
+    return init, update
+
+
+def adamw(lr_fn: Callable, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.01):
+    def init(params):
+        z = lambda: jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(jnp.int32(0), z(), z())
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr = lr_fn(step)
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        new = jax.tree_util.tree_map(
+            lambda p, m, v: (p.astype(jnp.float32)
+                             - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                                     + weight_decay * p.astype(jnp.float32))).astype(p.dtype),
+            params, mu, nu)
+        return new, OptState(step, mu, nu)
+
+    return init, update

@@ -1,0 +1,138 @@
+"""HLO-text collective accounting + roofline terms (brief §ROOFLINE ANALYSIS).
+
+``cost_analysis()`` supplies HLO FLOPs and bytes; collective traffic is NOT
+in cost_analysis, so we parse the post-SPMD optimized HLO and sum the result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. v5e constants from the brief: 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# e.g. "bf16[16,4096,896]{2,1,0}" — possibly inside tuple "(f32[...], f32[...])"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "  %x = TYPE all-reduce(" or "  x.1 = TYPE all-gather-start("
+_OP_RE = re.compile(
+    r"^\s*%?[\w.\-]+\s*=\s*(\(?[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.MULTILINE)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes by collective kind (result-shape sizes, '-done' ops skipped)."""
+    out: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        # avoid double counting start/done pairs: skip "-done" (result of
+        # start carries the buffer already) — the regex strips the suffix, so
+        # check the raw match text.
+        raw = m.group(0)
+        if f"{kind}-done" in raw:
+            continue
+        out[kind] += _shape_bytes(type_str)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """Per-step roofline terms, in seconds, for one (arch × shape × mesh)."""
+
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); 2·N·D for fwd-only."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def extract_cost(compiled) -> Tuple[float, float]:
+    """(flops, bytes_accessed) from compiled.cost_analysis(), robustly."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0)))
+    return flops, byts

@@ -1,0 +1,19 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see the real (single) CPU device; only launch/dryrun.py forces
+512 placeholder devices (brief, MULTI-POD DRY-RUN §0). Tests that need a
+small mesh spawn a subprocess (tests/test_dryrun_small.py)."""
+
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture()
+def np_rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,199 @@
+"""Tests for the beyond-paper extensions (the paper's own future-work list):
+update compression, client availability (A5 relaxation), adaptive μ, and the
+Pallas grouped-matmul kernel."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.adaptive import AdaptiveMu
+from repro.core.scoring import HeteRoScoreConfig
+from repro.core.selection import SelectorConfig, make_selector
+from repro.core.state import init_client_state
+from repro.fed import availability as avail
+from repro.fed import compression as comp
+from repro.kernels.moe_gmm import grouped_matmul
+from repro.kernels.ref import gmm_reference
+
+KEY = jax.random.PRNGKey(0)
+
+
+def small_tree():
+    k1, k2 = jax.random.split(KEY)
+    return {"a": jax.random.normal(k1, (32, 16)),
+            "b": {"w": jax.random.normal(k2, (8,)) * 3.0}}
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_bounded(self):
+        delta = small_tree()
+        c, stats = comp.quantize_int8(delta)
+        back = comp.dequantize_int8(c)
+        for a, b in zip(jax.tree_util.tree_leaves(delta),
+                        jax.tree_util.tree_leaves(back)):
+            scale = float(jnp.max(jnp.abs(a))) / 127.0
+            assert float(jnp.max(jnp.abs(a - b))) <= scale * 0.51
+        assert stats.ratio > 3.5  # fp32 -> int8 ≈ 4x
+
+    def test_topk_keeps_largest_and_tracks_residual(self):
+        delta = {"w": jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -2.0])}
+        c, resid, stats = comp.topk_sparsify(delta, frac=0.25)
+        back = comp.desparsify(c)
+        np.testing.assert_allclose(
+            np.asarray(back["w"]), [0, -5.0, 0, 3.0, 0, 0, 0, 0], atol=1e-7)
+        # residual carries the unsent mass exactly
+        np.testing.assert_allclose(
+            np.asarray(back["w"] + resid["w"]), np.asarray(delta["w"]), atol=1e-7)
+        assert stats.wire_bytes < stats.raw_bytes
+
+    def test_error_feedback_converges(self):
+        """With error feedback, repeated sparse rounds transmit everything."""
+        delta = {"w": jax.random.normal(KEY, (64,))}
+        resid = None
+        total = jnp.zeros(64)
+        for _ in range(8):
+            c, resid, _ = comp.topk_sparsify(delta, frac=0.25, residual=resid)
+            total = total + comp.desparsify(c)["w"]
+            delta = {"w": jnp.zeros(64)}  # nothing new after round 1
+        np.testing.assert_allclose(np.asarray(total),
+                                   np.asarray(jax.random.normal(KEY, (64,))),
+                                   atol=1e-5)
+
+    def test_aggregate_compressed_matches_fedavg(self):
+        anchor = small_tree()
+        deltas = [jax.tree_util.tree_map(lambda x: x * s, small_tree())
+                  for s in (0.1, -0.2, 0.3)]
+        cs = [comp.quantize_int8(d)[0] for d in deltas]
+        agg = comp.aggregate_compressed(anchor, cs)
+        exact = comp.tree_apply_delta(
+            anchor, jax.tree_util.tree_map(lambda *xs: sum(xs) / 3.0, *deltas))
+        for a, b in zip(jax.tree_util.tree_leaves(agg),
+                        jax.tree_util.tree_leaves(exact)):
+            assert float(jnp.max(jnp.abs(a - b))) < 0.05
+
+
+class TestAvailability:
+    def test_trace_shapes_and_quorum(self):
+        tr = avail.AvailabilityTrace(num_clients=10, seed=3)
+        m = tr.masks(50)
+        assert m.shape == (50, 10)
+        assert (m.sum(axis=1) >= 2).all()
+
+    def test_masked_selector_never_picks_offline(self):
+        k = 12
+        trace = avail.AvailabilityTrace(num_clients=k, p_stay_online=0.7,
+                                        p_come_online=0.4, seed=1)
+        masks = jnp.asarray(trace.masks(30))
+        base = make_selector("heterosel", SelectorConfig(num_selected=4),
+                             HeteRoScoreConfig())
+        sel = avail.mask_selector(base, masks, num_selected=4)
+        state = init_client_state(k, jnp.full((k,), 0.3))
+        for t in range(30):
+            chosen, _ = sel(jax.random.PRNGKey(t), state, jnp.int32(t))
+            offline_chosen = chosen & ~masks[t]
+            assert not bool(jnp.any(offline_chosen)), t
+
+    def test_system_profile_straggler(self):
+        prof = avail.SystemProfile(num_clients=8, seed=0)
+        sp = prof.speeds()
+        mask = np.zeros(8, bool)
+        mask[[np.argmax(sp)]] = True
+        assert prof.round_time(mask) == pytest.approx(sp.max())
+
+
+class TestAdaptiveMu:
+    def test_moves_toward_positive_and_clips(self):
+        ctl = AdaptiveMu(local_steps=2, local_lr=0.01, mu=0.1)
+        rng = np.random.default_rng(0)
+        for r in range(20):
+            mu = ctl.observe_round(rng.uniform(0.5, 2.0, 6), 100 - r)
+            assert 0.01 <= mu <= 1.0
+        # per-round movement is bounded by x2
+        mu_prev = ctl.mu
+        mu_next = ctl.observe_round(np.full(6, 100.0), 50)
+        assert mu_next <= mu_prev * 2 + 1e-9
+
+    def test_empty_round_is_noop(self):
+        ctl = AdaptiveMu(local_steps=2, local_lr=0.01, mu=0.2)
+        assert ctl.observe_round(np.zeros(4), 10) == 0.2
+
+
+class TestGroupedMatmulKernel:
+    @pytest.mark.parametrize("m,k,n,g,bm", [
+        (64, 32, 64, 4, 16),
+        (100, 16, 32, 3, 8),     # uneven M, small blocks
+        (256, 64, 128, 8, 32),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_against_reference(self, m, k, n, g, bm, dtype):
+        rng = np.random.default_rng(m + g)
+        sizes = rng.multinomial(m, np.ones(g) / g)
+        xs = jax.random.normal(KEY, (m, k), dtype)
+        rhs = jax.random.normal(jax.random.fold_in(KEY, 1), (g, k, n), dtype)
+        out = grouped_matmul(xs, rhs, jnp.asarray(sizes, jnp.int32),
+                             block_m=bm, block_n=min(n, 64), interpret=True)
+        ref = gmm_reference(xs, rhs, sizes)
+        tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=tol, rtol=tol)
+
+    def test_empty_groups(self):
+        sizes = jnp.asarray([0, 5, 0, 11], jnp.int32)
+        xs = jax.random.normal(KEY, (16, 8))
+        rhs = jax.random.normal(jax.random.fold_in(KEY, 2), (4, 8, 16))
+        out = grouped_matmul(xs, rhs, sizes, block_m=8, block_n=16, interpret=True)
+        ref = gmm_reference(xs, rhs, sizes)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+    def test_matches_ragged_dot(self):
+        """Drop-in parity with the lax primitive the models use."""
+        sizes = jnp.asarray([10, 22, 0, 32], jnp.int32)
+        xs = jax.random.normal(KEY, (64, 16))
+        rhs = jax.random.normal(jax.random.fold_in(KEY, 3), (4, 16, 32))
+        out = grouped_matmul(xs, rhs, sizes, block_m=16, block_n=32, interpret=True)
+        ref = jax.lax.ragged_dot(xs, rhs, sizes)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+class TestLoopIntegration:
+    """The beyond-paper options compose with the full federated loop."""
+
+    def _setup(self, rounds=4):
+        import dataclasses
+        from repro.configs.base import FedConfig
+        from repro.configs.registry import get_config, smoke_variant
+        from repro.data import make_vision_data
+        from repro.models import build_model
+        fed = FedConfig(num_clients=6, participation=0.5, rounds=rounds,
+                        local_epochs=1, local_batch=8, lr=0.2, mu=0.1, seed=0)
+        data = make_vision_data(fed, train_per_class=24, test_per_class=8,
+                                noise=0.3)
+        model = build_model(dataclasses.replace(
+            smoke_variant(get_config("resnet18-cifar10")), d_model=8))
+        return fed, data, model
+
+    def test_compression_runs_and_reports_traffic(self):
+        from repro.fed import run_federated
+        fed, data, model = self._setup()
+        res = run_federated(model, fed, data, selector="heterosel",
+                            steps_per_round=2, compression="int8")
+        assert res.wire_bytes > 0
+        assert res.raw_bytes / res.wire_bytes > 3.5
+        assert np.isfinite(res.accuracy).all()
+
+    def test_availability_and_adaptive_mu_run(self):
+        from repro.fed import run_federated
+        from repro.fed.availability import AvailabilityTrace
+        fed, data, model = self._setup()
+        tr = AvailabilityTrace(num_clients=6, seed=0)
+        res = run_federated(model, fed, data, selector="heterosel",
+                            steps_per_round=2,
+                            availability=tr.masks(fed.rounds),
+                            adaptive_mu=True)
+        assert res.mu_history is not None and len(res.mu_history) == fed.rounds
+        assert (res.mu_history >= 0.01).all() and (res.mu_history <= 1.0).all()

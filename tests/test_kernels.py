@@ -1,0 +1,151 @@
+"""Per-kernel validation (brief deliverable c): sweep shapes/dtypes in
+interpret mode and assert_allclose against the pure-jnp oracles in ref.py."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scoring import HeteRoScoreConfig
+from repro.core.selection import SelectorConfig, dynamic_temperature
+from repro.core.state import init_client_state, update_client_state
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s,t,h,kvh,d", [
+        (64, 64, 4, 4, 32),      # MHA square
+        (128, 128, 4, 2, 64),    # GQA
+        (96, 160, 2, 1, 16),     # MQA, uneven, padded blocks
+        (32, 256, 8, 8, 128),    # short q, long kv, MXU-width head
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_shapes_dtypes(self, s, t, h, kvh, d, dtype, causal):
+        if causal and s > t:
+            pytest.skip("causal requires s<=t alignment here")
+        k1, k2, k3 = jax.random.split(KEY, 3)
+        q = jax.random.normal(k1, (2, s, h, d), dtype)
+        k = jax.random.normal(k2, (2, t, kvh, d), dtype)
+        v = jax.random.normal(k3, (2, t, kvh, d), dtype)
+        out = ops.flash_mha(q, k, v, causal=causal, interpret=True)
+        kf = jnp.repeat(k, h // kvh, 2)
+        vf = jnp.repeat(v, h // kvh, 2)
+        expect = ref.mha_reference(
+            q.transpose(0, 2, 1, 3).reshape(2 * h, s, d),
+            kf.transpose(0, 2, 1, 3).reshape(2 * h, t, d),
+            vf.transpose(0, 2, 1, 3).reshape(2 * h, t, d),
+            causal=causal,
+        ).reshape(2, h, s, d).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32), **tol(dtype))
+
+    @pytest.mark.parametrize("window", [8, 32, 100])
+    def test_sliding_window(self, window):
+        q = jax.random.normal(KEY, (1, 128, 2, 32))
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 128, 2, 32))
+        v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 128, 2, 32))
+        out = ops.flash_mha(q, k, v, causal=True, window=window, interpret=True)
+        expect = ref.mha_reference(
+            q.transpose(0, 2, 1, 3).reshape(2, 128, 32),
+            k.transpose(0, 2, 1, 3).reshape(2, 128, 32),
+            v.transpose(0, 2, 1, 3).reshape(2, 128, 32),
+            causal=True, window=window,
+        ).reshape(1, 2, 128, 32).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32),
+            atol=2e-5, rtol=2e-5)
+
+    def test_matches_model_blockwise_path(self):
+        """Kernel ≡ the model's jnp blockwise attention (swap-in safety)."""
+        from repro.models.attention import blockwise_attention
+        q = jax.random.normal(KEY, (2, 64, 4, 32))
+        k = jax.random.normal(jax.random.fold_in(KEY, 3), (2, 64, 2, 32))
+        v = jax.random.normal(jax.random.fold_in(KEY, 4), (2, 64, 2, 32))
+        out_kernel = ops.flash_mha(q, k, v, causal=True, interpret=True)
+        out_model = blockwise_attention(q, k, v, causal=True, kv_chunk=16)
+        np.testing.assert_allclose(
+            np.asarray(out_kernel, np.float32), np.asarray(out_model, np.float32),
+            atol=2e-5, rtol=2e-5)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("s,nh,hp,n,chunk", [
+        (64, 2, 16, 8, 16),
+        (96, 3, 32, 16, 32),   # padded last chunk
+        (128, 1, 64, 32, 128), # single chunk
+    ])
+    def test_against_exact_recurrence(self, s, nh, hp, n, chunk):
+        k1, k2, k3, k4, k5 = jax.random.split(KEY, 5)
+        x = jax.random.normal(k1, (2, s, nh, hp))
+        dt = jax.nn.softplus(jax.random.normal(k2, (2, s, nh)))
+        a_neg = -jnp.exp(jax.random.normal(k3, (nh,)) * 0.3)
+        b_in = jax.random.normal(k4, (2, s, n)) * 0.5
+        c_in = jax.random.normal(k5, (2, s, n)) * 0.5
+        y, h = ops.ssd_forward(x, dt, a_neg, b_in, c_in, chunk=chunk, interpret=True)
+        y_ref, h_ref = ref.ssd_reference(x, dt, a_neg, b_in, c_in)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-3, rtol=2e-3)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=2e-3, rtol=2e-3)
+
+    def test_matches_model_ssd_path(self):
+        """Kernel composition ≡ the model's _ssd_chunked (swap-in safety)."""
+        from repro.models.mamba2 import _ssd_chunked
+        k1, k2, k3, k4, k5 = jax.random.split(jax.random.fold_in(KEY, 9), 5)
+        x = jax.random.normal(k1, (1, 64, 2, 16))
+        dt = jax.nn.softplus(jax.random.normal(k2, (1, 64, 2)))
+        a_neg = -jnp.exp(jax.random.normal(k3, (2,)) * 0.3)
+        b_in = jax.random.normal(k4, (1, 64, 8)) * 0.5
+        c_in = jax.random.normal(k5, (1, 64, 8)) * 0.5
+        y_k, h_k = ops.ssd_forward(x, dt, a_neg, b_in, c_in, chunk=16, interpret=True)
+        y_m, h_m = _ssd_chunked(x, dt, a_neg, b_in, c_in, 16)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m), atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_m), atol=1e-4, rtol=1e-4)
+
+
+class TestScoreSelectKernel:
+    @pytest.mark.parametrize("k", [12, 100, 500, 1000])
+    def test_fused_matches_paper_scoring(self, k):
+        rng = np.random.default_rng(k)
+        s = init_client_state(k, jnp.asarray(rng.uniform(0, 0.69, k), jnp.float32))
+        for t in range(3):
+            s = update_client_state(
+                s, round_idx=jnp.int32(t),
+                selected_mask=jnp.asarray(rng.uniform(size=k) > 0.4),
+                observed_loss=jnp.asarray(rng.uniform(0.1, 4, k), jnp.float32),
+                observed_sqnorm=jnp.asarray(rng.uniform(0, 2, k), jnp.float32),
+            )
+        cfg = HeteRoScoreConfig()
+        t = jnp.int32(17)
+        tau = dynamic_temperature(t, SelectorConfig())
+        p, sc = ops.heterosel_probs(s, t, tau, cfg, interpret=True)
+        p_ref, sc_ref = ref.score_probs_reference(s, t, tau, cfg)
+        np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_ref), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref), atol=2e-6)
+        assert float(jnp.sum(p)) == pytest.approx(1.0, abs=1e-5)
+
+    @hypothesis.given(seed=st.integers(0, 1000), t=st.integers(0, 150))
+    @hypothesis.settings(deadline=None, max_examples=10)
+    def test_fused_probs_property(self, seed, t):
+        rng = np.random.default_rng(seed)
+        k = 64
+        s = init_client_state(k, jnp.asarray(rng.uniform(0, 0.69, k), jnp.float32))
+        s = update_client_state(
+            s, round_idx=jnp.int32(0),
+            selected_mask=jnp.asarray(rng.uniform(size=k) > 0.5),
+            observed_loss=jnp.asarray(rng.uniform(0.01, 9, k), jnp.float32),
+            observed_sqnorm=jnp.asarray(rng.uniform(0, 5, k), jnp.float32),
+        )
+        cfg = HeteRoScoreConfig()
+        tau = dynamic_temperature(jnp.int32(t), SelectorConfig())
+        p, _ = ops.heterosel_probs(s, jnp.int32(t), tau, cfg, interpret=True)
+        assert bool(jnp.all(p >= 0)) and bool(jnp.all(jnp.isfinite(p)))
+        assert float(jnp.sum(p)) == pytest.approx(1.0, abs=1e-5)
