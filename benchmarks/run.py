@@ -14,14 +14,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,table2,table3,table4,kernels,roofline")
+                    help="comma list: table1,table2,table3,table4,table5,"
+                         "kernels,roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (kernel_bench, roofline_table, table1_selection,
                             table2_participation, table3_ablation,
-                            table4_crossdataset)
+                            table4_crossdataset, table5_scaling)
 
     print("name,us_per_call,derived")
     jobs = [
@@ -31,6 +32,7 @@ def main() -> None:
         ("table2", table2_participation.main),
         ("table3", table3_ablation.main),
         ("table4", table4_crossdataset.main),
+        ("table5", table5_scaling.main),
     ]
     for name, fn in jobs:
         if only and name not in only:

@@ -21,8 +21,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=15)
     ap.add_argument("--selector", default="heterosel",
-                    choices=["heterosel", "heterosel_mult", "oort",
-                             "power_of_choice", "random"])
+                    choices=["heterosel", "heterosel_pallas", "heterosel_mult",
+                             "oort", "power_of_choice", "random"])
+    ap.add_argument("--client-execution", default=None,
+                    choices=["batched", "sequential"],
+                    help="override FedConfig.client_execution")
     args = ap.parse_args()
 
     fed = FedConfig(num_clients=12, participation=0.5, rounds=args.rounds,
@@ -35,7 +38,8 @@ def main():
     print(f"selector={args.selector}  clients={fed.num_clients}  "
           f"m={fed.num_selected}/round  mu={fed.mu}")
     res = run_federated(model, fed, data, selector=args.selector,
-                        steps_per_round=4, verbose=True)
+                        steps_per_round=4, verbose=True,
+                        client_execution=args.client_execution)
     print("\n== paper metrics ==")
     for k, v in res.summary().items():
         print(f"  {k:16s} {v:.4f}")

@@ -146,6 +146,14 @@ class FedConfig:
     selector: str = "heterosel"
     dirichlet_alpha: float = 0.1
     seed: int = 0
+    # Client-execution engine (docs/architecture.md §2):
+    #   'batched'    — all selected clients in one vmapped jitted call
+    #                  (default; the only path that scales past ~10² clients)
+    #   'sequential' — one jitted call per client; the numerical reference.
+    client_execution: str = "batched"
+    # With 'batched': >0 caps the per-call cohort at this many clients
+    # (fixed-shape chunks, one compile; bounds memory when m is large).
+    client_chunk: int = 0
 
     @property
     def num_selected(self) -> int:

@@ -48,6 +48,10 @@ class SelectorConfig:
     oort_explore_frac: float = 0.1 # Oort ε — fraction of slots for exploration
     oort_staleness_coef: float = 0.1
     oort_system_alpha: float = 2.0 # Oort system-utility exponent
+    # Score+softmax via the fused Pallas kernel (kernels.score_select) —
+    # single-pass over the (K,) metadata vectors; additive form only.
+    # Large-K path: the struct-of-arrays ClientState feeds it directly.
+    use_fused_kernel: bool = False
 
 
 def dynamic_temperature(round_idx: jax.Array, cfg: SelectorConfig) -> jax.Array:
@@ -86,10 +90,26 @@ def heterosel_select(
     sel_cfg: SelectorConfig,
     score_cfg: HeteRoScoreConfig,
 ) -> Tuple[jax.Array, jax.Array]:
-    """HeteRo-Select: Algorithm 1, phases 1–2."""
-    scores = compute_scores(state, round_idx, score_cfg, additive=sel_cfg.additive)
+    """HeteRo-Select: Algorithm 1, phases 1–2.
+
+    With ``sel_cfg.use_fused_kernel`` the six score components + softmax run
+    as the single-pass Pallas kernel over the struct-of-arrays state
+    (``kernels.score_select``) — the production large-K path; interpret mode
+    keeps it runnable (and tested) on CPU. Additive form only.
+    """
     tau = dynamic_temperature(round_idx, sel_cfg)
-    probs = selection_probabilities(scores, tau)
+    if sel_cfg.use_fused_kernel:
+        if not sel_cfg.additive:
+            raise ValueError("fused scoring kernel implements the additive form only")
+        from repro.kernels import ops as kernel_ops  # deferred: pallas optional
+
+        probs, _ = kernel_ops.heterosel_probs(
+            state, jnp.asarray(round_idx, jnp.float32), tau, score_cfg,
+            interpret=jax.default_backend() != "tpu",
+        )
+    else:
+        scores = compute_scores(state, round_idx, score_cfg, additive=sel_cfg.additive)
+        probs = selection_probabilities(scores, tau)
     mask = sample_clients(key, probs, sel_cfg.num_selected)
     return mask, probs
 
@@ -172,7 +192,8 @@ def make_selector(
     *,
     speeds: Optional[jax.Array] = None,
 ) -> SelectFn:
-    """Factory: 'heterosel' | 'heterosel_mult' | 'random' | 'power_of_choice' | 'oort'.
+    """Factory: 'heterosel' | 'heterosel_pallas' | 'heterosel_mult' | 'random'
+    | 'power_of_choice' | 'oort'.
 
     ``speeds`` (K,) enables Oort's system-utility term on heterogeneous
     fleets (fed.availability.SystemProfile.speeds()).
@@ -180,6 +201,9 @@ def make_selector(
     score_cfg = score_cfg or HeteRoScoreConfig()
     if name == "heterosel":
         return functools.partial(heterosel_select, sel_cfg=sel_cfg, score_cfg=score_cfg)
+    if name == "heterosel_pallas":
+        fused = dataclasses.replace(sel_cfg, use_fused_kernel=True, additive=True)
+        return functools.partial(heterosel_select, sel_cfg=fused, score_cfg=score_cfg)
     if name == "heterosel_mult":
         mult = dataclasses.replace(sel_cfg, additive=False)
         return functools.partial(heterosel_select, sel_cfg=mult, score_cfg=score_cfg)
@@ -192,4 +216,5 @@ def make_selector(
     raise ValueError(f"unknown selector '{name}'")
 
 
-SELECTORS = ("heterosel", "heterosel_mult", "random", "power_of_choice", "oort")
+SELECTORS = ("heterosel", "heterosel_pallas", "heterosel_mult", "random",
+             "power_of_choice", "oort")

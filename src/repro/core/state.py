@@ -106,3 +106,44 @@ def update_client_state(
 def staleness(state: ClientState, round_idx: jax.Array) -> jax.Array:
     """Δ_k = t - l_k, clipped to ≥0 (never-selected clients get huge Δ)."""
     return jnp.maximum(jnp.asarray(round_idx, jnp.int32) - state.last_selected, 0)
+
+
+def scatter_observations(
+    num_clients: int,
+    selected_idx: jax.Array,
+    mean_loss: jax.Array,
+    update_sqnorm: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Dense (K,) observation arrays from the batched cohort's (M,) results.
+
+    The batched execution engine trains the selected cohort as one stacked
+    call (fed.batched); its per-client metadata comes back ordered by the
+    cohort, not by client id. This scatters it into the dense layout
+    ``update_client_state`` consumes — non-selected slots read 0 and are
+    masked out by ``selected_mask`` there.
+    """
+    idx = jnp.asarray(selected_idx, jnp.int32)
+    loss = jnp.zeros((num_clients,), jnp.float32).at[idx].set(
+        jnp.asarray(mean_loss, jnp.float32))
+    sq = jnp.zeros((num_clients,), jnp.float32).at[idx].set(
+        jnp.asarray(update_sqnorm, jnp.float32))
+    return loss, sq
+
+
+def score_inputs(state: ClientState) -> tuple[jax.Array, ...]:
+    """The eight (K,) metadata vectors, in the argument order of the fused
+    Pallas scoring kernel ``kernels.score_select.fused_score_probs``.
+
+    Keeping the state struct-of-arrays means feeding the kernel is a plain
+    tuple unpack — no per-client gather, no host round-trip, at any K.
+    """
+    return (
+        state.loss_prev,
+        state.loss_prev2,
+        state.label_js,
+        state.part_count,
+        state.last_selected,
+        state.update_sqnorm,
+        state.has_loss,
+        state.has_momentum,
+    )

@@ -2,10 +2,20 @@
 
 from repro.data.synthetic import (
     VisionFedData,
+    LazyVisionFedData,
     LMFedData,
     make_vision_data,
+    make_lazy_vision_data,
     make_lm_data,
     input_specs,
 )
 
-__all__ = ["VisionFedData", "LMFedData", "make_vision_data", "make_lm_data", "input_specs"]
+__all__ = [
+    "VisionFedData",
+    "LazyVisionFedData",
+    "LMFedData",
+    "make_vision_data",
+    "make_lazy_vision_data",
+    "make_lm_data",
+    "input_specs",
+]

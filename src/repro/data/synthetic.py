@@ -1,10 +1,19 @@
 """Synthetic federated datasets + dry-run input specs.
 
-No-internet substitute for CIFAR-10/Fashion-MNIST/MNIST (DESIGN.md §1): a
-class-conditional image generator whose difficulty is controlled by the
-template/noise ratio. Label-skew heterogeneity, client drift and selection
-dynamics — the phenomena the paper studies — are all driven by the Dirichlet
-partition, which we reproduce exactly; only the pixel source is synthetic.
+No-internet substitute for CIFAR-10/Fashion-MNIST/MNIST
+(docs/architecture.md §7): a class-conditional image generator whose
+difficulty is controlled by the template/noise ratio. Label-skew
+heterogeneity, client drift and selection dynamics — the phenomena the paper
+studies — are all driven by the Dirichlet partition, which we reproduce
+exactly; only the pixel source is synthetic.
+
+Two materialization strategies:
+  * ``make_vision_data``      — the paper-scale path: a concrete dataset with
+    per-client index lists (K ~ 10¹).
+  * ``make_lazy_vision_data`` — the cross-device-scale path (K up to 10⁴–10⁵):
+    only the (K, C) Dirichlet label distributions persist; each round's
+    cohort batches are synthesized on the fly, stacked along a leading
+    client axis for the batched execution engine (docs/architecture.md §3).
 
 Also provides the LM/audio/VLM federated stand-ins for the big architectures
 and the ``input_specs`` ShapeDtypeStruct providers used by launch/dryrun.py.
@@ -103,6 +112,115 @@ def make_vision_data(
 
 
 # ---------------------------------------------------------------------------
+# Vision at cross-device scale: lazily materialized label-skew federation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LazyVisionFedData:
+    """K=10⁴-scale label-skew federation, materialized lazily per round.
+
+    Nothing per-sample is stored: each client k exists only as a row of
+    ``label_dists`` (its Dirichlet label distribution). Batches are
+    synthesized on demand — labels drawn from the client's distribution,
+    pixels from the shared class templates + client-seeded noise — so memory
+    is O(K·C + C·H·W), not O(N·H·W). ``stacked_client_batches`` emits the
+    whole selected cohort in one vectorized numpy pass with a leading (M,)
+    client axis, which is what the batched execution engine consumes.
+    """
+
+    templates: np.ndarray       # (C, H, W, 3) shared class templates
+    label_dists: np.ndarray     # (K, C) per-client Dirichlet label dist
+    label_js: np.ndarray        # (K,) JS(P_k || P_avg)
+    noise: float
+    test_images: np.ndarray
+    test_labels: np.ndarray
+
+    @property
+    def num_clients(self) -> int:
+        return self.label_dists.shape[0]
+
+    def _synthesize(self, labels: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+        imgs = self.templates[labels] + self.noise * rng.standard_normal(
+            labels.shape + self.templates.shape[1:], dtype=np.float32)
+        return imgs.astype(np.float32)
+
+    def _sample_labels(self, ks: np.ndarray, n: int,
+                       rng: np.random.Generator) -> np.ndarray:
+        """(len(ks), n) labels, row i drawn from client ks[i]'s distribution."""
+        cdf = np.cumsum(self.label_dists[np.asarray(ks, np.int64)], axis=1)
+        u = rng.random((len(ks), n, 1))
+        return (u > cdf[:, None, :]).sum(axis=2).astype(np.int32)
+
+    def client_batches(self, k: int, steps: int, batch: int,
+                       rng: np.random.Generator) -> Dict[str, jnp.ndarray]:
+        labels = self._sample_labels(np.asarray([k]), steps * batch, rng)[0]
+        imgs = self._synthesize(labels, rng)
+        h, w = self.templates.shape[1], self.templates.shape[2]
+        return {
+            "images": jnp.asarray(imgs.reshape(steps, batch, h, w, 3)),
+            "labels": jnp.asarray(labels.reshape(steps, batch)),
+        }
+
+    def stacked_client_batches(self, selected: np.ndarray, steps: int, batch: int,
+                               rng: np.random.Generator) -> Dict[str, jnp.ndarray]:
+        """One cohort in one pass: leaves shaped (M, steps, batch, ...)."""
+        sel = np.asarray(selected)
+        m, n = len(sel), steps * batch
+        labels = self._sample_labels(sel, n, rng)          # (M, n)
+        imgs = self._synthesize(labels, rng)               # (M, n, H, W, 3)
+        h, w = self.templates.shape[1], self.templates.shape[2]
+        return {
+            "images": jnp.asarray(imgs.reshape(m, steps, batch, h, w, 3)),
+            "labels": jnp.asarray(labels.reshape(m, steps, batch)),
+        }
+
+    def eval_batch(self) -> Dict[str, jnp.ndarray]:
+        return {
+            "images": jnp.asarray(self.test_images),
+            "labels": jnp.asarray(self.test_labels),
+        }
+
+
+def make_lazy_vision_data(
+    fed: FedConfig,
+    *,
+    num_classes: int = 10,
+    image_size: int = 32,
+    test_per_class: int = 16,
+    noise: float = 0.8,
+    seed: int | None = None,
+) -> LazyVisionFedData:
+    """Label-skew federation with ``fed.num_clients`` lazily-backed clients.
+
+    Unlike ``dirichlet_partition`` (which deals out a finite sample pool and
+    needs per-client index lists), each client's label distribution is drawn
+    directly from Dir(α) — the same skew model at unbounded K and zero
+    per-sample storage. K=10⁴ costs ~K·C floats of state (< 1 MB).
+    """
+    seed = fed.seed if seed is None else seed
+    rng = np.random.default_rng(seed)
+    templates = _class_templates(rng, num_classes, image_size).astype(np.float32)
+    dists = rng.dirichlet(
+        np.full(num_classes, fed.dirichlet_alpha), size=fed.num_clients
+    ).astype(np.float64)
+    test_labels = np.repeat(np.arange(num_classes), test_per_class).astype(np.int32)
+    test_images = (
+        templates[test_labels]
+        + noise * rng.standard_normal(
+            (len(test_labels), image_size, image_size, 3), dtype=np.float32)
+    ).astype(np.float32)
+    return LazyVisionFedData(
+        templates=templates,
+        label_dists=dists,
+        label_js=client_label_js(dists),
+        noise=noise,
+        test_images=test_images,
+        test_labels=test_labels,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Language modelling: per-client "dialect" token streams
 # ---------------------------------------------------------------------------
 
@@ -170,7 +288,7 @@ def make_lm_data(fed: FedConfig, vocab: int, seq_len: int = 64) -> LMFedData:
 
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
-    """Abstract model inputs for (arch × input-shape), per DESIGN.md §4.
+    """Abstract model inputs for (arch × input-shape), per docs/architecture.md §7.
 
     train/prefill: the full (global_batch, seq_len) batch.
     decode: one new token per sequence (the KV/state cache is built

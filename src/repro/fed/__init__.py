@@ -1,5 +1,17 @@
-"""Federated substrate: partitioning, FedProx clients, aggregation, round loop."""
+"""Federated substrate: partitioning, FedProx clients, batched cohort
+execution, aggregation, round loop."""
 
+from repro.fed.batched import (
+    make_batched_local_train,
+    stack_client_trees,
+    train_clients_batched,
+)
 from repro.fed.loop import FLResult, run_federated
 
-__all__ = ["FLResult", "run_federated"]
+__all__ = [
+    "FLResult",
+    "run_federated",
+    "make_batched_local_train",
+    "stack_client_trees",
+    "train_clients_batched",
+]

@@ -5,8 +5,11 @@ Local objective (Eq 13):  min_w  L_k(w) + (μ/2)·||w − w_global||².
 The local update is plain SGD on that objective (Algorithm 1 line 21):
     w ← w − α_lr (∇L_k(w) + μ(w − w_global))
 — deliberately optimizer-state-free, which is what makes FedProx-style FL of
-very large models HBM-feasible (DESIGN.md §2). ``local_train`` scans over a
-pre-batched epoch stack so the whole client visit is one jitted call.
+very large models HBM-feasible, and what lets the batched execution engine
+(fed.batched, docs/architecture.md §2) vmap a whole cohort of these visits
+into one call without stacking per-client optimizer state. ``local_train``
+scans over a pre-batched epoch stack so the whole client visit is one
+jitted call.
 
 Returns the update squared-norm ‖w_k − w_global‖² and the final mini-batch
 loss — the metadata HeteRo-Select's N_k(t) / V_k(t) scores consume.

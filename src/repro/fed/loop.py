@@ -6,6 +6,12 @@ FedAvg aggregation → metadata update → evaluation. It works for any selector
 in ``repro.core.selection`` and any model family, and returns exactly the
 metrics the paper reports (peak / final / stable accuracy, stability drop,
 selection counts + their std).
+
+Client execution (docs/architecture.md §2): the default ``'batched'`` engine
+stacks the selected cohort and trains it in one vmapped jitted call
+(``fed.batched``), aggregating with a fused weighted reduction;
+``'sequential'`` dispatches one jitted call per client and is kept as the
+numerical reference (and the path the host-side compression codecs use).
 """
 
 from __future__ import annotations
@@ -23,12 +29,14 @@ from repro.configs.base import FedConfig
 from repro.core.adaptive import AdaptiveMu
 from repro.core.scoring import HeteRoScoreConfig
 from repro.core.selection import SelectorConfig, make_selector
-from repro.core.state import init_client_state, update_client_state
+from repro.core.state import init_client_state, scatter_observations, update_client_state
 from repro.fed import availability as fed_avail
+from repro.fed import batched as fed_batched
 from repro.fed import client as fed_client
 from repro.fed import compression as fed_comp
 from repro.fed import server as fed_server
 from repro.models.model import Model
+from repro.sharding.rules import MeshAxes, axis_size
 
 
 @dataclasses.dataclass
@@ -96,6 +104,9 @@ def run_federated(
     topk_frac: float = 0.1,
     availability: Optional[np.ndarray] = None,  # (rounds, K) bool masks
     adaptive_mu: bool = False,
+    client_execution: Optional[str] = None,  # None ⇒ fed.client_execution
+    mesh: Optional[Any] = None,              # multi-device cohort sharding
+    mesh_axes: Optional[MeshAxes] = None,    # .pod names the client axis
     verbose: bool = False,
 ) -> FLResult:
     """Run ``fed.rounds`` federated rounds and collect paper metrics.
@@ -104,6 +115,11 @@ def run_federated(
     ``compression`` applies int8 / top-k(+error-feedback) coding to client
     deltas; ``availability`` restricts each round's candidate set (A5
     relaxation); ``adaptive_mu`` drives μ by Lemma A.4 online.
+
+    ``client_execution`` overrides ``fed.client_execution``
+    ('batched' | 'sequential'). Compression forces the sequential path: the
+    codecs keep per-client host-side residual state. ``mesh``/``mesh_axes``
+    shard the batched cohort over the mesh's 'pod' axis (fed.batched).
     """
     score_cfg = score_cfg or HeteRoScoreConfig()
     sel_cfg = sel_cfg or SelectorConfig(num_selected=fed.num_selected)
@@ -124,7 +140,21 @@ def run_federated(
         if adaptive_mu else None
     mu_now = fed.mu
 
+    exec_mode = client_execution or fed.client_execution
+    if exec_mode not in ("batched", "sequential"):
+        raise ValueError(f"client_execution must be 'batched' or 'sequential', got {exec_mode!r}")
+    if compression is not None:
+        exec_mode = "sequential"  # codecs keep per-client host residual state
+    # Pod-sharded cohorts need a client axis divisible by the pod size;
+    # train_clients_batched pads with zero-weight repeats to guarantee it.
+    pod_size = 0
+    if mesh is not None and mesh_axes is not None and mesh_axes.pod is not None:
+        pod_size = axis_size(mesh, mesh_axes.pod)
+
     def make_local_train(mu_val):
+        if exec_mode == "batched":
+            return fed_batched.make_batched_local_train(
+                model.loss, lr=fed.lr, mu=mu_val, mesh=mesh, axes=mesh_axes)
         return jax.jit(functools.partial(
             fed_client.local_train, model.loss, lr=fed.lr, mu=mu_val))
 
@@ -148,37 +178,55 @@ def run_federated(
         selected = np.flatnonzero(mask_np)
         sel_hist.append(mask_np)
 
-        new_params: List[Any] = []
-        compressed: List[Any] = []
-        obs_loss = np.zeros(data.num_clients, np.float32)
-        obs_sqnorm = np.zeros(data.num_clients, np.float32)
-        for k in selected:
-            batches = data.client_batches(int(k), steps, fed.local_batch, rng)
-            res = local_train(params, batches)
-            obs_loss[k] = float(res.mean_loss)
-            obs_sqnorm[k] = float(res.update_sqnorm)
-            if compression is None:
-                new_params.append(res.params)
-                continue
-            delta = fed_comp.tree_delta(res.params, params)
-            if compression == "int8":
-                c, stats = fed_comp.quantize_int8(delta)
-            elif compression == "topk":
-                c, resid, stats = fed_comp.topk_sparsify(
-                    delta, topk_frac, residuals.get(int(k)))
-                residuals[int(k)] = resid
+        if exec_mode == "batched":
+            # One vmapped jitted call trains the whole cohort; the fused
+            # weighted reduction in fed.server replaces the Python average.
+            stacked = fed_batched.gather_stacked_batches(
+                data, selected, steps, fed.local_batch, rng)
+            cohort = fed_batched.train_clients_batched(
+                local_train, params, stacked, chunk=fed.client_chunk,
+                pad_to=pod_size)
+            obs_loss_j, obs_sq_j = scatter_observations(
+                data.num_clients, jnp.asarray(selected),
+                cohort.mean_loss, cohort.update_sqnorm)
+            obs_loss = np.asarray(obs_loss_j)
+            obs_sqnorm = np.asarray(obs_sq_j)
+            if momentum is not None:
+                params = momentum.apply(params, cohort.avg_params)
             else:
-                raise ValueError(compression)
-            compressed.append(c)
-            wire_total += stats.wire_bytes
-            raw_total += stats.raw_bytes
-
-        if compression is not None:
-            params = fed_comp.aggregate_compressed(params, compressed)
-        elif momentum is not None:
-            params = momentum.aggregate(params, new_params)
+                params = cohort.avg_params
         else:
-            params = fed_server.fedavg(new_params)
+            new_params: List[Any] = []
+            compressed: List[Any] = []
+            obs_loss = np.zeros(data.num_clients, np.float32)
+            obs_sqnorm = np.zeros(data.num_clients, np.float32)
+            for k in selected:
+                batches = data.client_batches(int(k), steps, fed.local_batch, rng)
+                res = local_train(params, batches)
+                obs_loss[k] = float(res.mean_loss)
+                obs_sqnorm[k] = float(res.update_sqnorm)
+                if compression is None:
+                    new_params.append(res.params)
+                    continue
+                delta = fed_comp.tree_delta(res.params, params)
+                if compression == "int8":
+                    c, stats = fed_comp.quantize_int8(delta)
+                elif compression == "topk":
+                    c, resid, stats = fed_comp.topk_sparsify(
+                        delta, topk_frac, residuals.get(int(k)))
+                    residuals[int(k)] = resid
+                else:
+                    raise ValueError(compression)
+                compressed.append(c)
+                wire_total += stats.wire_bytes
+                raw_total += stats.raw_bytes
+
+            if compression is not None:
+                params = fed_comp.aggregate_compressed(params, compressed)
+            elif momentum is not None:
+                params = momentum.aggregate(params, new_params)
+            else:
+                params = fed_server.fedavg(new_params)
 
         if mu_ctl is not None:
             new_mu = mu_ctl.observe_round(obs_sqnorm[selected], fed.rounds - t)

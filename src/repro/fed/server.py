@@ -34,6 +34,40 @@ def fedavg_weighted(client_params: Sequence[Any], weights: Sequence[float]) -> A
     )
 
 
+def weighted_sum_stacked(stacked_params: Any, weights: jax.Array) -> Any:
+    """Σ_m w_m · x_m over the leading client axis — one fused reduction per leaf.
+
+    The contraction (``tensordot`` over axis 0) is a single XLA reduce per
+    parameter leaf, replacing the O(M) Python accumulation of the sequential
+    path. Leaves come back float32 (callers cast once at the end); weights
+    are used as given (callers normalize).
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.tensordot(w, x.astype(jnp.float32), axes=1), stacked_params
+    )
+
+
+def fedavg_fused(stacked_params: Any, weights: Optional[jax.Array] = None) -> Any:
+    """Weighted FedAvg over a leading (M,) client axis as fused reductions.
+
+    ``weights=None`` → the paper's unweighted mean (Algorithm 1 line 26);
+    otherwise weights are normalized to sum to 1. Output leaves keep the
+    input dtype. This is the batched engine's aggregation step — see
+    docs/architecture.md §2.
+    """
+    m = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+    if weights is None:
+        w = jnp.full((m,), 1.0 / m, jnp.float32)
+    else:
+        w = jnp.asarray(weights, jnp.float32)
+        w = w / jnp.maximum(jnp.sum(w), 1e-30)
+    summed = weighted_sum_stacked(stacked_params, w)
+    return jax.tree_util.tree_map(
+        lambda s, x: s.astype(x.dtype), summed, stacked_params
+    )
+
+
 def fedavg_stacked(stacked_params: Any, axis_name: Optional[str] = None) -> Any:
     """FedAvg over a leading client axis (the multi-pod 'pod'-axis path).
 
@@ -59,7 +93,14 @@ class ServerMomentum:
     velocity: Any = None
 
     def aggregate(self, prev_global: Any, client_params: Sequence[Any]) -> Any:
-        avg = fedavg(client_params)
+        return self.apply(prev_global, fedavg(client_params))
+
+    def aggregate_stacked(self, prev_global: Any, stacked_params: Any,
+                          weights: Optional[jax.Array] = None) -> Any:
+        """Momentum over the batched engine's (M, ...) client stack."""
+        return self.apply(prev_global, fedavg_fused(stacked_params, weights))
+
+    def apply(self, prev_global: Any, avg: Any) -> Any:
         delta = jax.tree_util.tree_map(
             lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32), prev_global, avg
         )

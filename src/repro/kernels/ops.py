@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.scoring import HeteRoScoreConfig
-from repro.core.state import ClientState
+from repro.core.state import ClientState, score_inputs
 from repro.kernels import flash_attention as _fa
 from repro.kernels import score_select as _ss
 from repro.kernels import ssd_scan as _ssd
@@ -85,10 +85,11 @@ def ssd_forward(x, dt, a_neg, b_in, c_in, *, chunk: int = 256,
 
 def heterosel_probs(state: ClientState, round_idx, tau,
                     cfg: HeteRoScoreConfig, *, interpret: bool = False):
-    """Fused additive scoring + softmax (Eqs 1–12) via Pallas."""
+    """Fused additive scoring + softmax (Eqs 1–12) via Pallas.
+
+    ``score_inputs`` owns the state-field → kernel-argument ordering.
+    """
     return _ss.fused_score_probs(
-        state.loss_prev, state.loss_prev2, state.label_js,
-        state.part_count, state.last_selected,
-        state.update_sqnorm, state.has_loss, state.has_momentum,
+        *score_inputs(state),
         round_idx=round_idx, tau=tau, cfg=cfg, interpret=interpret,
     )

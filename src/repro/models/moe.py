@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.sharding.rules import shard_map_compat
 from repro.models import attention as attn
 from repro.models.layers import (
     DEFAULT_DTYPE,
@@ -124,7 +125,8 @@ def _moe_ffn_local(cfg: ModelConfig, lp: Params, x: jax.Array,
 
 
 def _moe_ffn_a2a(cfg: ModelConfig, lp: Params, x: jax.Array,
-                 *, data_axis: str, model_axis: str) -> Tuple[jax.Array, jax.Array]:
+                 *, data_axis: str, model_axis: str,
+                 dsz: int) -> Tuple[jax.Array, jax.Array]:
     """§Perf hillclimb path: experts sharded over 'data', token all-to-all.
 
     Device (i, j) holds experts E_i (E/|data| of them) with f-slice j. Tokens
@@ -136,7 +138,8 @@ def _moe_ffn_a2a(cfg: ModelConfig, lp: Params, x: jax.Array,
     activations (≈4× less for Kimi-K2 at train_4k, ∞× less at decode).
     Capacity per (src, dst) pair is cf·T_loc·k/|data| with drop-on-overflow.
     """
-    dsz = jax.lax.axis_size(data_axis)
+    # dsz comes in statically from the mesh (shapes below depend on it;
+    # lax.axis_size does not exist on older jax).
     b, s, d = x.shape
     k = cfg.num_experts_per_tok
     e = cfg.num_experts
@@ -219,13 +222,13 @@ def moe_ffn(
             P(data_axis, None, None),
         )
         fn = functools.partial(_moe_ffn_a2a, cfg,
-                               data_axis=data_axis, model_axis=model_axis)
-        return jax.shard_map(
+                               data_axis=data_axis, model_axis=model_axis,
+                               dsz=dsz)
+        return shard_map_compat(
             lambda lp_, x_: fn(lp_, x_),
             mesh=mesh,
             in_specs=in_specs,
             out_specs=(P(data_axis, None, None), P()),
-            check_vma=False,
         )({k: lp[k] for k in ("router", "w_gate", "w_up", "w_down")}, x)
 
     # Tokens shard over 'data' only when the batch dim divides it; tiny-batch
@@ -247,12 +250,11 @@ def moe_ffn(
     out_specs = (P(x_axis, None, None), P())
 
     fn = functools.partial(_moe_ffn_local, cfg, model_axis=model_axis, fsdp_axis=fsdp_axis)
-    return jax.shard_map(
+    return shard_map_compat(
         lambda lp_, x_: fn(lp_, x_),
         mesh=mesh,
         in_specs=in_specs,
         out_specs=out_specs,
-        check_vma=False,
     )(
         {k: lp[k] for k in ("router", "w_gate", "w_up", "w_down")}, x
     )

@@ -1,6 +1,6 @@
 """Sharding rules: params / batch / cache PartitionSpecs per (arch × mesh).
 
-Policy (DESIGN.md §2):
+Policy (docs/architecture.md §4):
   * 'model' axis — tensor parallelism: attention heads (or head_dim when the
     head count does not divide the axis, e.g. qwen2's 14 heads), d_ff, vocab,
     MoE d_ff slices, Mamba2 inner width / SSD heads.
@@ -8,7 +8,10 @@ Policy (DESIGN.md §2):
     sharding when a replica of (params + FedProx anchor) would not fit
     HBM with model-axis sharding alone (llama3-405b, kimi-k2, grok-1,
     llama-3.2-vision-90b).
-  * 'pod'   axis — concurrent federated clients (stacked client axis).
+  * 'pod'   axis — concurrent federated clients (stacked client axis). The
+    batched client-execution engine (fed.batched) shards its cohort's
+    leading client axis over 'pod' — ``batch_specs(..., client_axis=True)``
+    / ``POD_AXES`` are its conventions.
 
 Every rule degrades gracefully: a dim shards on an axis only when divisible,
 otherwise the next candidate dim is tried, otherwise it replicates. That is
@@ -44,8 +47,38 @@ class MeshAxes:
     pod: Optional[str] = None  # set on the multi-pod mesh
 
 
+# Axis naming used by the batched client-execution engine (fed.batched):
+# the stacked-cohort client axis lives on 'pod'.
+POD_AXES = MeshAxes(pod="pod")
+
+
+def shard_map_compat(f, *, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions.
+
+    jax ≥ 0.6 exposes ``jax.shard_map`` (replica check flag ``check_vma``);
+    older releases only have ``jax.experimental.shard_map.shard_map``
+    (flag ``check_rep``). Both checks are disabled — our bodies use
+    collectives whose replication the checker cannot always prove.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 def axis_size(mesh: Mesh, name: Optional[str]) -> int:
-    return dict(zip(mesh.axis_names, mesh.devices.shape))[name] if name else 1
+    """Size of a mesh axis; 1 for ``None``, 0 when absent from the mesh.
+
+    0 makes every ``_div`` check fail, so rules never assign an axis the
+    mesh does not have — e.g. the batched-cohort engine runs on a pod-only
+    mesh with no 'data'/'model' axes and batch dims simply replicate.
+    """
+    if not name:
+        return 1
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 0)
 
 
 def _div(n: int, k: int) -> bool:

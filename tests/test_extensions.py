@@ -2,8 +2,6 @@
 update compression, client availability (A5 relaxation), adaptive μ, and the
 Pallas grouped-matmul kernel."""
 
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
 
