@@ -23,7 +23,7 @@ from repro.configs.registry import get_config, smoke_variant
 from repro.core.scoring import HeteRoScoreConfig
 from repro.core.selection import SelectorConfig
 from repro.data import make_vision_data
-from repro.fed import run_federated
+from repro.fed import FederatedSpec
 from repro.models import build_model
 
 
@@ -53,12 +53,12 @@ def run_method(model, fed, data, selector: str, *,
                sel_cfg: Optional[SelectorConfig] = None,
                steps_per_round: int = 4):
     t0 = time.time()
-    res = run_federated(
+    res = FederatedSpec(
         model, fed, data, selector=selector,
         score_cfg=score_cfg,
         sel_cfg=sel_cfg or SelectorConfig(num_selected=fed.num_selected),
         steps_per_round=steps_per_round,
-    )
+    ).build().run()
     dt = time.time() - t0
     us_per_round = dt / fed.rounds * 1e6
     return res, us_per_round

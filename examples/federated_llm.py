@@ -1,6 +1,8 @@
 """Federated LLM fine-tuning: HeteRo-Select scheduling a *language model*
 federation (qwen2-family smoke config) — demonstrates that the control plane
-is model-agnostic and drives the same fed/loop.py with an LM data plane.
+is model-agnostic and drives the same round engine (fed/engine.py) with an
+LM data plane. ``FLResult.metric_name`` reports the LM eval metric honestly
+as exp(-loss), not accuracy.
 
     PYTHONPATH=src python examples/federated_llm.py [--rounds 8]
 """
@@ -12,7 +14,7 @@ import numpy as np
 from repro.configs.base import FedConfig
 from repro.configs.registry import get_config, smoke_variant
 from repro.data import make_lm_data
-from repro.fed import run_federated
+from repro.fed import FederatedSpec
 from repro.models import build_model
 
 
@@ -30,9 +32,9 @@ def main():
 
     print(f"arch={cfg.name} (reduced)  clients={fed.num_clients}  "
           f"dialect JS: {np.round(data.label_js, 3)}")
-    res = run_federated(model, fed, data, selector="heterosel",
-                        steps_per_round=3, verbose=True)
-    print("\nper-round eval exp(-loss):", np.round(res.accuracy, 4))
+    res = FederatedSpec(model, fed, data, selector="heterosel",
+                        steps_per_round=3, verbose=True).build().run()
+    print(f"\nper-round eval {res.metric_name}:", np.round(res.accuracy, 4))
     print("train loss:", np.round(res.train_loss, 3))
 
 

@@ -14,7 +14,7 @@ import numpy as np
 from repro.configs.base import FedConfig
 from repro.configs.registry import get_config, smoke_variant
 from repro.data import make_vision_data
-from repro.fed import run_federated
+from repro.fed import FederatedSpec
 from repro.models import build_model
 
 METHODS = ["heterosel", "heterosel_mult", "oort", "power_of_choice", "random"]
@@ -35,7 +35,8 @@ def main():
     print("label JS divergence per client:", np.round(data.label_js, 3))
     rows = {}
     for m in METHODS:
-        res = run_federated(model, fed, data, selector=m, steps_per_round=4)
+        res = FederatedSpec(model, fed, data, selector=m,
+                            steps_per_round=4).build().run()
         rows[m] = res
         s = res.summary()
         print(f"{m:18s} peak={s['peak_acc']:.3f} final={s['final_acc']:.3f} "

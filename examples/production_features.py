@@ -1,10 +1,13 @@
 """Production-features demo: the paper's declared future work, running.
 
-One federation, four configurations:
+One federation, five spec configurations of the composable round engine:
   1. paper-faithful Algorithm 1 (baseline),
-  2. + int8 update compression (4× less client→server traffic),
-  3. + top-k sparsification with error feedback (10–20×),
-  4. + client churn (A5 relaxed) + adaptive μ (Lemma A.4 online).
+  2. + int8 update compression, composed with the *batched* executor
+     (stateless codec ⇒ vectorized over the client stack),
+  3. + top-k sparsification with error feedback (sequential executor —
+     the codec owns per-client host residuals),
+  4. + client churn (A5 relaxed) + adaptive μ (Lemma A.4 online, a hook),
+  5. + server momentum (FedAvgM aggregator).
 
     PYTHONPATH=src python examples/production_features.py [--rounds 12]
 """
@@ -17,7 +20,7 @@ import numpy as np
 from repro.configs.base import FedConfig
 from repro.configs.registry import get_config, smoke_variant
 from repro.data import make_vision_data
-from repro.fed import run_federated
+from repro.fed import FederatedSpec
 from repro.fed.availability import AvailabilityTrace
 from repro.models import build_model
 
@@ -36,16 +39,19 @@ def main():
 
     runs = {
         "baseline": dict(),
-        "int8": dict(compression="int8"),
-        "topk10%+EF": dict(compression="topk", topk_frac=0.1),
+        "int8 (batched)": dict(compression="int8", executor="batched"),
+        "topk10%+EF (seq)": dict(compression="topk", topk_frac=0.1,
+                                 executor="sequential"),
         "churn+adaptive-mu": dict(
             availability=AvailabilityTrace(fed.num_clients, seed=2).masks(fed.rounds),
-            adaptive_mu=True),
+            hooks=["adaptive_mu"]),
+        "fedavgm": dict(aggregator="fedavgm"),
     }
     print(f"{'config':20s} {'peak':>6s} {'final':>6s} {'wire-compression':>17s}  mu trace")
     for name, kw in runs.items():
-        res = run_federated(model, fed, data, selector="heterosel",
-                            steps_per_round=4, **kw)
+        spec = FederatedSpec(model, fed, data, selector="heterosel",
+                             steps_per_round=4, **kw)
+        res = spec.build().run()
         ratio = res.raw_bytes / res.wire_bytes if res.wire_bytes else 1.0
         mu = (np.round(res.mu_history, 3).tolist()[:5]
               if res.mu_history is not None else "-")

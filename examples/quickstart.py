@@ -1,8 +1,9 @@
 """Quickstart: HeteRo-Select federated training in ~40 lines.
 
 Runs the paper's Algorithm 1 on a synthetic non-IID image federation
-(12 clients, Dirichlet α=0.1, 50% participation, FedProx μ=0.1) and prints
-the paper's metrics: peak / final / stable accuracy + stability drop.
+(12 clients, Dirichlet α=0.1, 50% participation, FedProx μ=0.1) via the
+composable round engine and prints the paper's metrics: peak / final /
+stable accuracy + stability drop.
 
     PYTHONPATH=src python examples/quickstart.py [--rounds 20]
 """
@@ -13,7 +14,7 @@ import dataclasses
 from repro.configs.base import FedConfig
 from repro.configs.registry import get_config, smoke_variant
 from repro.data import make_vision_data
-from repro.fed import run_federated
+from repro.fed import FederatedSpec
 from repro.models import build_model
 
 
@@ -23,9 +24,11 @@ def main():
     ap.add_argument("--selector", default="heterosel",
                     choices=["heterosel", "heterosel_pallas", "heterosel_mult",
                              "oort", "power_of_choice", "random"])
-    ap.add_argument("--client-execution", default=None,
-                    choices=["batched", "sequential"],
+    ap.add_argument("--executor", "--client-execution", dest="executor",
+                    default=None, choices=["batched", "sequential"],
                     help="override FedConfig.client_execution")
+    ap.add_argument("--aggregator", default="fedavg",
+                    choices=["fedavg", "fedavg_weighted", "fedavgm"])
     args = ap.parse_args()
 
     fed = FedConfig(num_clients=12, participation=0.5, rounds=args.rounds,
@@ -37,10 +40,11 @@ def main():
 
     print(f"selector={args.selector}  clients={fed.num_clients}  "
           f"m={fed.num_selected}/round  mu={fed.mu}")
-    res = run_federated(model, fed, data, selector=args.selector,
-                        steps_per_round=4, verbose=True,
-                        client_execution=args.client_execution)
-    print("\n== paper metrics ==")
+    spec = FederatedSpec(model, fed, data, selector=args.selector,
+                         steps_per_round=4, executor=args.executor,
+                         aggregator=args.aggregator, verbose=True)
+    res = spec.build().run()
+    print(f"\n== paper metrics (eval metric: {res.metric_name}) ==")
     for k, v in res.summary().items():
         print(f"  {k:16s} {v:.4f}")
     print(f"  selection counts: {res.selection_counts.tolist()}")

@@ -1,5 +1,21 @@
-"""Checkpointing: flattened-keypath npz save/restore (host-local shards)."""
+"""Checkpointing: flattened-keypath npz save/restore (host-local shards),
+plus the federated round-state snapshots ``fed.engine.CheckpointHook`` uses
+for mid-run resume."""
 
-from repro.ckpt.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.ckpt.checkpoint import (
+    latest_federated_round,
+    latest_step,
+    restore_checkpoint,
+    restore_federated_round,
+    save_checkpoint,
+    save_federated_round,
+)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "save_federated_round",
+    "restore_federated_round",
+    "latest_federated_round",
+]

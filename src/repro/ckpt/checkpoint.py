@@ -3,8 +3,17 @@
 Parameters are flattened to keypath→array and written as one ``.npz`` per
 host (process-local shards via ``jax.experimental.multihost_utils`` would
 slot in here on a real fleet; on a single host this is the whole tree).
-A ``meta.json`` records step, round and client-state so federated runs
-resume mid-training.
+
+Two layers:
+
+  * ``save_checkpoint`` / ``restore_checkpoint`` — params-only snapshots
+    with a free-form ``meta.json`` (final-model export, serving).
+  * ``save_federated_round`` / ``restore_federated_round`` — the full
+    resumable state of a federated run: named pytrees (global params,
+    ``ClientState``, PRNG key, aggregator state) plus raw metric arrays and
+    a JSON meta carrying the host numpy RNG state. This is what
+    ``fed.engine.CheckpointHook`` round-trips so a run killed at round t
+    and resumed matches an uninterrupted run.
 """
 
 from __future__ import annotations
@@ -46,6 +55,81 @@ def latest_step(path: str) -> Optional[int]:
     steps = [int(m.group(1)) for f in os.listdir(path)
              if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
     return max(steps) if steps else None
+
+
+# ---------------------------------------------------------------------------
+# Federated round-state checkpoints (fed.engine.CheckpointHook)
+# ---------------------------------------------------------------------------
+
+
+def save_federated_round(path: str, *, round_idx: int,
+                         trees: Dict[str, Any],
+                         arrays: Dict[str, np.ndarray],
+                         meta: Dict[str, Any]) -> str:
+    """Write one resumable federated-round snapshot.
+
+    ``trees`` are pytrees restored structure-driven (a ``like`` template is
+    required at restore); ``arrays`` are raw numpy arrays returned as-is
+    (metric series whose length depends on the round). ``meta`` must be
+    JSON-serializable — the numpy ``bit_generator.state`` dict qualifies.
+    """
+    os.makedirs(path, exist_ok=True)
+    flat: Dict[str, np.ndarray] = {}
+    for name, tree in trees.items():
+        for key, leaf in _flatten(tree).items():
+            flat[f"tree:{name}/{key}"] = leaf
+    for name, arr in arrays.items():
+        flat[f"array:{name}"] = np.asarray(arr)
+    fname = os.path.join(path, f"fedround_{round_idx:08d}.npz")
+    np.savez(fname, **flat)
+    with open(os.path.join(path, f"fedround_{round_idx:08d}.json"), "w") as f:
+        json.dump({"round": round_idx, **meta}, f)
+    return fname
+
+
+def latest_federated_round(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    rounds = [int(m.group(1)) for f in os.listdir(path)
+              if (m := re.match(r"fedround_(\d+)\.npz$", f))]
+    return max(rounds) if rounds else None
+
+
+def restore_federated_round(
+    path: str, *, likes: Dict[str, Any], round_idx: Optional[int] = None,
+    optional: Tuple[str, ...] = (),
+) -> Tuple[Dict[str, Any], Dict[str, np.ndarray], Dict[str, Any]]:
+    """Restore a ``save_federated_round`` snapshot.
+
+    ``likes`` maps tree name → template pytree (same keypaths and dtypes as
+    at save time). Names listed in ``optional`` are skipped silently when
+    absent from the snapshot (e.g. aggregator state of a stateless
+    aggregator). Returns ``(trees, arrays, meta)``.
+    """
+    round_idx = latest_federated_round(path) if round_idx is None else round_idx
+    if round_idx is None:
+        raise FileNotFoundError(f"no federated checkpoint under {path}")
+    data = np.load(os.path.join(path, f"fedround_{round_idx:08d}.npz"))
+    trees: Dict[str, Any] = {}
+    for name, like in likes.items():
+        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+        keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
+                for kp, _ in leaves_with_path]
+        files = [f"tree:{name}/{k}" for k in keys]
+        missing = [f for f in files if f not in data.files]
+        if missing:
+            if name in optional:
+                continue
+            raise KeyError(f"checkpoint missing keys for tree {name!r}: "
+                           f"{missing[:5]} ...")
+        restored = [jax.numpy.asarray(data[f], dtype=leaf.dtype)
+                    for f, (_, leaf) in zip(files, leaves_with_path)]
+        trees[name] = jax.tree_util.tree_unflatten(treedef, restored)
+    arrays = {f[len("array:"):]: data[f] for f in data.files
+              if f.startswith("array:")}
+    with open(os.path.join(path, f"fedround_{round_idx:08d}.json")) as f:
+        meta = json.load(f)
+    return trees, arrays, meta
 
 
 def restore_checkpoint(path: str, like: Any, step: Optional[int] = None

@@ -79,6 +79,35 @@ def dequantize_int8(c: CompressedDelta) -> Any:
         lambda q, s: q.astype(jnp.float32) * s, c.payload, c.meta)
 
 
+def quantize_int8_stacked(stacked_delta: Any) -> Tuple[CompressedDelta, CompressionStats]:
+    """Per-client per-tensor int8 over a leading (M,) client axis.
+
+    Vectorized form of ``quantize_int8`` for the batched execution engine:
+    each client's scale is the max-abs over its own slice (axes 1..n), so
+    client m's codes equal ``quantize_int8(delta_m)`` exactly — int8 is the
+    codec with no host-side state, which is what lets compression compose
+    with the batched schedule (fed.engine.CompressedExecutor).
+    """
+    def q(x):
+        axes = tuple(range(1, x.ndim))
+        scale = jnp.maximum(
+            jnp.max(jnp.abs(x), axis=axes, keepdims=True), 1e-12) / 127.0
+        return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8), scale
+
+    leaves, treedef = jax.tree_util.tree_flatten(stacked_delta)
+    qs = [q(l) for l in leaves]
+    payload = jax.tree_util.tree_unflatten(treedef, [a for a, _ in qs])
+    meta = jax.tree_util.tree_unflatten(treedef, [s for _, s in qs])
+    raw = sum(l.size * 4 for l in leaves)                 # deltas are f32
+    wire = sum(l.size + 4 * l.shape[0] for l in leaves)   # int8 + scale/client
+    return CompressedDelta(payload, meta, "int8_stacked"), CompressionStats(raw, wire)
+
+
+# The per-client scales carry broadcastable (M, 1, ..) shapes in ``meta``, so
+# decoding is the same op as the per-client codec.
+dequantize_int8_stacked = dequantize_int8
+
+
 # ---------------------------------------------------------------------------
 # top-k sparsification with error feedback
 # ---------------------------------------------------------------------------

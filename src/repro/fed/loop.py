@@ -1,92 +1,36 @@
-"""The full federated round loop (paper Algorithm 1) + run metrics.
+"""Backwards-compatible entry point for the federated round loop.
 
-One entry point, ``run_federated``, drives: multi-criteria scoring →
-probabilistic selection → FedProx local training of the selected clients →
-FedAvg aggregation → metadata update → evaluation. It works for any selector
-in ``repro.core.selection`` and any model family, and returns exactly the
-metrics the paper reports (peak / final / stable accuracy, stability drop,
-selection counts + their std).
+The Algorithm-1 skeleton now lives in ``repro.fed.engine`` as a composable
+round engine (``FederatedEngine``) with pluggable client executors,
+aggregators, and round hooks. ``run_federated`` survives here with its
+original signature: it assembles a ``FederatedSpec`` from the legacy
+keyword surface and returns the same ``FLResult`` — numerically identical,
+same seeds, to the pre-engine monolith (pinned by
+tests/test_engine_api.py's golden-equivalence test).
 
-Client execution (docs/architecture.md §2): the default ``'batched'`` engine
-stacks the selected cohort and trains it in one vmapped jitted call
-(``fed.batched``), aggregating with a fused weighted reduction;
-``'sequential'`` dispatches one jitted call per client and is kept as the
-numerical reference (and the path the host-side compression codecs use).
+New code should build a ``FederatedSpec`` directly:
+
+    from repro.fed import FederatedSpec
+    res = FederatedSpec(model, fed, data, selector="heterosel",
+                        executor="batched", aggregator="fedavg",
+                        hooks=["adaptive_mu"]).build().run()
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Optional
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import FedConfig
-from repro.core.adaptive import AdaptiveMu
 from repro.core.scoring import HeteRoScoreConfig
-from repro.core.selection import SelectorConfig, make_selector
-from repro.core.state import init_client_state, scatter_observations, update_client_state
-from repro.fed import availability as fed_avail
-from repro.fed import batched as fed_batched
-from repro.fed import client as fed_client
-from repro.fed import compression as fed_comp
-from repro.fed import server as fed_server
+from repro.core.selection import SelectorConfig
+from repro.fed.engine import FederatedSpec, FLResult, default_eval
 from repro.models.model import Model
-from repro.sharding.rules import MeshAxes, axis_size
+from repro.sharding.rules import MeshAxes
 
-
-@dataclasses.dataclass
-class FLResult:
-    accuracy: np.ndarray          # (rounds,) eval accuracy (or -loss for LM)
-    train_loss: np.ndarray        # (rounds,)
-    selection_counts: np.ndarray  # (K,)
-    selected_history: np.ndarray  # (rounds, K) bool
-    params: Any
-    wire_bytes: int = 0           # client→server traffic (compression on)
-    raw_bytes: int = 0
-    mu_history: Optional[np.ndarray] = None  # adaptive-μ trace
-
-    @property
-    def peak_acc(self) -> float:
-        return float(self.accuracy.max())
-
-    @property
-    def final_acc(self) -> float:
-        return float(self.accuracy[-1])
-
-    @property
-    def stable_acc(self) -> float:
-        return float(self.accuracy[-10:].mean())
-
-    @property
-    def stability_drop(self) -> float:
-        return self.peak_acc - self.final_acc
-
-    @property
-    def selection_std(self) -> float:
-        return float(self.selection_counts.std())
-
-    def summary(self) -> Dict[str, float]:
-        return {
-            "peak_acc": self.peak_acc,
-            "final_acc": self.final_acc,
-            "stable_acc": self.stable_acc,
-            "stability_drop": self.stability_drop,
-            "selection_std": self.selection_std,
-        }
-
-
-def _default_eval(model: Model, params: Any, batch: Dict[str, jnp.ndarray]) -> float:
-    """Accuracy for classifiers; exp(-loss) (per-token) for LM families."""
-    if model.cfg.family == "resnet":
-        logits = model.forward(params, batch)
-        return float(jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32)))
-    loss = model.loss(params, batch)
-    return float(jnp.exp(-loss))
+# Back-compat alias: the default eval lived here pre-engine.
+_default_eval = default_eval
 
 
 def run_federated(
@@ -111,151 +55,35 @@ def run_federated(
 ) -> FLResult:
     """Run ``fed.rounds`` federated rounds and collect paper metrics.
 
-    Beyond-paper options (all default off → paper-faithful Algorithm 1):
-    ``compression`` applies int8 / top-k(+error-feedback) coding to client
-    deltas; ``availability`` restricts each round's candidate set (A5
-    relaxation); ``adaptive_mu`` drives μ by Lemma A.4 online.
+    Thin wrapper over ``fed.engine``: every kwarg maps onto a
+    ``FederatedSpec`` field (``adaptive_mu=True`` becomes the
+    ``'adaptive_mu'`` hook). Beyond-paper options default off →
+    paper-faithful Algorithm 1.
 
-    ``client_execution`` overrides ``fed.client_execution``
-    ('batched' | 'sequential'). Compression forces the sequential path: the
-    codecs keep per-client host-side residual state. ``mesh``/``mesh_axes``
-    shard the batched cohort over the mesh's 'pod' axis (fed.batched).
+    ``compression`` composes with the execution schedule instead of forcing
+    one: int8 runs under either executor; top-k needs the sequential path
+    (per-client host residuals) — requesting it with an *explicit*
+    ``client_execution='batched'`` raises, while the config-default batched
+    schedule downgrades with an explicit warning.
     """
-    score_cfg = score_cfg or HeteRoScoreConfig()
-    sel_cfg = sel_cfg or SelectorConfig(num_selected=fed.num_selected)
-    selector_name = selector or fed.selector
-    select = make_selector(selector_name, sel_cfg, score_cfg)
-    if availability is not None:
-        select = fed_avail.mask_selector(select, jnp.asarray(availability),
-                                          num_selected=fed.num_selected)
-    eval_fn = eval_fn or _default_eval
-
-    rng = np.random.default_rng(fed.seed)
-    key = jax.random.PRNGKey(fed.seed)
-    params = model.init_params(jax.random.PRNGKey(fed.seed + 1))
-    state = init_client_state(data.num_clients, jnp.asarray(data.label_js, jnp.float32))
-    steps = steps_per_round or fed.local_epochs
-
-    mu_ctl = AdaptiveMu(local_steps=steps, local_lr=fed.lr, mu=fed.mu) \
-        if adaptive_mu else None
-    mu_now = fed.mu
-
-    exec_mode = client_execution or fed.client_execution
-    if exec_mode not in ("batched", "sequential"):
-        raise ValueError(f"client_execution must be 'batched' or 'sequential', got {exec_mode!r}")
-    if compression is not None:
-        exec_mode = "sequential"  # codecs keep per-client host residual state
-    # Pod-sharded cohorts need a client axis divisible by the pod size;
-    # train_clients_batched pads with zero-weight repeats to guarantee it.
-    pod_size = 0
-    if mesh is not None and mesh_axes is not None and mesh_axes.pod is not None:
-        pod_size = axis_size(mesh, mesh_axes.pod)
-
-    def make_local_train(mu_val):
-        if exec_mode == "batched":
-            return fed_batched.make_batched_local_train(
-                model.loss, lr=fed.lr, mu=mu_val, mesh=mesh, axes=mesh_axes)
-        return jax.jit(functools.partial(
-            fed_client.local_train, model.loss, lr=fed.lr, mu=mu_val))
-
-    local_train = make_local_train(mu_now)
-    select_jit = jax.jit(select)
-    momentum = fed_server.ServerMomentum() if aggregator == "fedavgm" else None
-
-    eval_batch = data.eval_batch()
-    accs: List[float] = []
-    losses: List[float] = []
-    sel_hist: List[np.ndarray] = []
-    mu_hist: List[float] = []
-    residuals: Dict[int, Any] = {}
-    wire_total = 0
-    raw_total = 0
-
-    for t in range(fed.rounds):
-        key, sk = jax.random.split(key)
-        mask, _ = select_jit(sk, state, jnp.int32(t))
-        mask_np = np.asarray(mask)
-        selected = np.flatnonzero(mask_np)
-        sel_hist.append(mask_np)
-
-        if exec_mode == "batched":
-            # One vmapped jitted call trains the whole cohort; the fused
-            # weighted reduction in fed.server replaces the Python average.
-            stacked = fed_batched.gather_stacked_batches(
-                data, selected, steps, fed.local_batch, rng)
-            cohort = fed_batched.train_clients_batched(
-                local_train, params, stacked, chunk=fed.client_chunk,
-                pad_to=pod_size)
-            obs_loss_j, obs_sq_j = scatter_observations(
-                data.num_clients, jnp.asarray(selected),
-                cohort.mean_loss, cohort.update_sqnorm)
-            obs_loss = np.asarray(obs_loss_j)
-            obs_sqnorm = np.asarray(obs_sq_j)
-            if momentum is not None:
-                params = momentum.apply(params, cohort.avg_params)
-            else:
-                params = cohort.avg_params
-        else:
-            new_params: List[Any] = []
-            compressed: List[Any] = []
-            obs_loss = np.zeros(data.num_clients, np.float32)
-            obs_sqnorm = np.zeros(data.num_clients, np.float32)
-            for k in selected:
-                batches = data.client_batches(int(k), steps, fed.local_batch, rng)
-                res = local_train(params, batches)
-                obs_loss[k] = float(res.mean_loss)
-                obs_sqnorm[k] = float(res.update_sqnorm)
-                if compression is None:
-                    new_params.append(res.params)
-                    continue
-                delta = fed_comp.tree_delta(res.params, params)
-                if compression == "int8":
-                    c, stats = fed_comp.quantize_int8(delta)
-                elif compression == "topk":
-                    c, resid, stats = fed_comp.topk_sparsify(
-                        delta, topk_frac, residuals.get(int(k)))
-                    residuals[int(k)] = resid
-                else:
-                    raise ValueError(compression)
-                compressed.append(c)
-                wire_total += stats.wire_bytes
-                raw_total += stats.raw_bytes
-
-            if compression is not None:
-                params = fed_comp.aggregate_compressed(params, compressed)
-            elif momentum is not None:
-                params = momentum.aggregate(params, new_params)
-            else:
-                params = fed_server.fedavg(new_params)
-
-        if mu_ctl is not None:
-            new_mu = mu_ctl.observe_round(obs_sqnorm[selected], fed.rounds - t)
-            mu_hist.append(new_mu)
-            if abs(new_mu - mu_now) / max(mu_now, 1e-9) > 0.25:
-                mu_now = new_mu
-                local_train = make_local_train(mu_now)  # recompile (rare)
-
-        state = update_client_state(
-            state,
-            round_idx=jnp.int32(t),
-            selected_mask=jnp.asarray(mask_np),
-            observed_loss=jnp.asarray(obs_loss),
-            observed_sqnorm=jnp.asarray(obs_sqnorm),
-        )
-        acc = eval_fn(model, params, eval_batch)
-        accs.append(acc)
-        losses.append(float(np.mean(obs_loss[selected])) if len(selected) else 0.0)
-        if verbose and (t % 10 == 0 or t == fed.rounds - 1):
-            print(f"[{selector_name}] round {t:3d}  acc={acc:.4f}  loss={losses[-1]:.4f}")
-
-    sel_hist_arr = np.stack(sel_hist)
-    return FLResult(
-        accuracy=np.array(accs),
-        train_loss=np.array(losses),
-        selection_counts=sel_hist_arr.sum(axis=0),
-        selected_history=sel_hist_arr,
-        params=params,
-        wire_bytes=wire_total,
-        raw_bytes=raw_total,
-        mu_history=np.array(mu_hist) if mu_hist else None,
+    hooks = ["adaptive_mu"] if adaptive_mu else []
+    spec = FederatedSpec(
+        model=model,
+        fed=fed,
+        data=data,
+        selector=selector,
+        score_cfg=score_cfg,
+        sel_cfg=sel_cfg,
+        steps_per_round=steps_per_round,
+        eval_fn=eval_fn,
+        executor=client_execution,
+        compression=compression,
+        topk_frac=topk_frac,
+        aggregator=aggregator,
+        hooks=hooks,
+        availability=availability,
+        mesh=mesh,
+        mesh_axes=mesh_axes,
+        verbose=verbose,
     )
+    return spec.build().run()

@@ -11,21 +11,23 @@ a reduced architecture so the launcher itself is exercised end-to-end.
 The control plane (HeteRo-Select scoring over client metadata) always runs
 on the host exactly as in the paper; the data plane (FedProx local steps)
 is jitted and, when a multi-device mesh exists, sharded via sharding/rules.
+
+``--ckpt-dir`` enables mid-run checkpoint/resume via the engine's
+``CheckpointHook``: every ``--ckpt-every`` rounds the full resumable state
+(params, client metadata, RNG streams) is written, and a relaunch with the
+same directory resumes where the killed run stopped.
 """
 
 from __future__ import annotations
 
 import argparse
-import dataclasses
-
-import numpy as np
 
 import jax
 
 from repro.configs.base import FedConfig
 from repro.configs.registry import get_config, smoke_variant
 from repro.data import make_lm_data, make_vision_data
-from repro.fed import run_federated
+from repro.fed import CheckpointHook, FederatedSpec
 from repro.models import build_model
 from repro.ckpt import save_checkpoint
 
@@ -39,9 +41,13 @@ def main() -> None:
     ap.add_argument("--mu", type=float, default=0.1)
     ap.add_argument("--lr", type=float, default=0.3)
     ap.add_argument("--selector", default="heterosel")
+    ap.add_argument("--aggregator", default="fedavg",
+                    choices=["fedavg", "fedavg_weighted", "fedavgm"])
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke variant of --arch (CPU)")
-    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="enable mid-run checkpoint/resume under this dir")
+    ap.add_argument("--ckpt-every", type=int, default=5)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -58,8 +64,14 @@ def main() -> None:
         data = make_lm_data(fed, vocab=cfg.vocab_size, seq_len=32)
 
     model = build_model(cfg)
-    res = run_federated(model, fed, data, steps_per_round=4, verbose=True)
-    print("\nfinal metrics:", res.summary())
+    hooks = []
+    if args.ckpt_dir:
+        hooks.append(CheckpointHook(args.ckpt_dir, every=args.ckpt_every,
+                                    resume=True))
+    spec = FederatedSpec(model, fed, data, steps_per_round=4,
+                         aggregator=args.aggregator, hooks=hooks, verbose=True)
+    res = spec.build().run()
+    print(f"\nfinal metrics ({res.metric_name}):", res.labeled_summary())
     if args.ckpt_dir:
         path = save_checkpoint(args.ckpt_dir, res.params, step=fed.rounds,
                                extra=res.summary())
