@@ -13,8 +13,10 @@ the scale.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
-from typing import Dict, Optional
+from typing import Any, Dict, Optional
 
 import numpy as np
 
@@ -69,3 +71,34 @@ def emit(name: str, us_per_call: float, derived: Dict[str, float]) -> None:
     dstr = ";".join(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"
                     for k, v in derived.items())
     print(f"{name},{us_per_call:.1f},{dstr}", flush=True)
+
+
+def _jsonable(x: Any) -> Any:
+    if isinstance(x, dict):
+        return {k: _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, np.ndarray):
+        return [_jsonable(v) for v in x.tolist()]
+    if isinstance(x, (np.floating, np.integer)):
+        x = x.item()
+    if isinstance(x, float) and not np.isfinite(x):
+        return None  # strict JSON has no Infinity/NaN
+    return x
+
+
+def emit_bench_json(name: str, payload: Dict[str, Any],
+                    out_dir: Optional[str] = None) -> str:
+    """Machine-readable benchmark record: ``BENCH_<name>.json``.
+
+    The shared emitter every bench table writes results through (numpy
+    scalars/arrays are converted), so downstream tooling parses one format.
+    Written next to the benches by default; returns the path.
+    """
+    out_dir = out_dir or os.path.dirname(os.path.abspath(__file__))
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": name, **_jsonable(payload)}, f, indent=2)
+        f.write("\n")
+    print(f"[bench] wrote {path}", flush=True)
+    return path

@@ -1,0 +1,150 @@
+"""Table 6 (beyond-paper): simulated wall-clock to target accuracy — sync
+barrier rounds vs event-driven async rounds under a straggler profile.
+
+The synchronous engine pays the straggler tax every round: the round lasts
+as long as its slowest selected client, so a 10× straggler in the cohort
+makes the round 10× longer while contributing one update. The async engine
+(docs/architecture.md §2b) over-selects, closes each round at a deadline,
+and folds late updates in as staleness-discounted arrivals — so its rounds
+cost ~the deadline and the straggler's work is not thrown away.
+
+Both runs use the identical federation, model, selector and seeds; the only
+difference is round management. Sync wall-clock is straggler-paced
+(``max latency over the selected cohort`` per round, the ``SystemProfile``
+semantics); async wall-clock comes from the engine's virtual clock
+(``FLResult.wall_clock``).
+
+    PYTHONPATH=src python benchmarks/table6_async.py            # full table
+    PYTHONPATH=src python benchmarks/table6_async.py --smoke    # CI guard
+
+CSV columns: name,virtual_us_per_round,derived(rounds;final;wall_total;
+wall_to_target). Machine-readable record: BENCH_async.json via the shared
+emitter (benchmarks/common.py: emit_bench_json).
+
+Acceptance (ISSUE 4): async reaches the target accuracy in less simulated
+wall-clock than sync under a 10× straggler profile.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+
+import numpy as np
+
+try:  # package-style (benchmarks/run.py) or direct execution from benchmarks/
+    from benchmarks.common import (bench_data, bench_fed_config, bench_model,
+                                   emit, emit_bench_json)
+except ImportError:
+    from common import (bench_data, bench_fed_config, bench_model, emit,
+                        emit_bench_json)
+
+from repro.core.selection import SelectorConfig
+from repro.fed import AsyncConfig, FederatedSpec
+
+
+def straggler_multipliers(k: int, factor: float, frac: float) -> np.ndarray:
+    """(K,) round-time multipliers: a ``frac`` slice of clients is ``factor×``
+    slower, spread evenly across client ids (so label skew and slowness are
+    uncorrelated)."""
+    mult = np.ones(k)
+    n_slow = max(int(round(frac * k)), 1)
+    mult[np.linspace(0, k - 1, n_slow).astype(int)] = factor
+    return mult
+
+
+def wall_to_target(acc: np.ndarray, wall: np.ndarray, target: float) -> float:
+    """Simulated wall-clock at which the accuracy series first hits target."""
+    hit = np.flatnonzero(np.asarray(acc) >= target)
+    return float(wall[hit[0]]) if len(hit) else math.inf
+
+
+def run_table(*, quick: bool, clients: int, rounds: int, factor: float,
+              frac: float, deadline: float, over_select: float,
+              target_frac: float, steps: int) -> dict:
+    fed = bench_fed_config(quick, num_clients=clients, rounds=rounds)
+    data = bench_data(fed)
+    model = bench_model()
+    mult = straggler_multipliers(clients, factor, frac)
+    sel_cfg = SelectorConfig(num_selected=fed.num_selected)
+
+    res_sync = FederatedSpec(model, fed, data, selector="heterosel",
+                             sel_cfg=sel_cfg, steps_per_round=steps).build().run()
+    # Sync wall-clock: each barrier round lasts as long as its slowest
+    # selected client (SystemProfile.round_time semantics).
+    per_round = np.array([mult[sel].max() if sel.any() else 0.0
+                          for sel in res_sync.selected_history.astype(bool)])
+    wall_sync = np.cumsum(per_round)
+
+    res_async = FederatedSpec(
+        model, fed, data, selector="heterosel", sel_cfg=sel_cfg,
+        steps_per_round=steps, round_policy="async", system=mult,
+        async_cfg=AsyncConfig(deadline=deadline, over_select_frac=over_select),
+    ).build().run()
+    wall_async = res_async.wall_clock
+
+    target = target_frac * res_sync.final_acc
+    rows = {
+        "sync": dict(final=res_sync.final_acc, peak=res_sync.peak_acc,
+                     wall_total=float(wall_sync[-1]),
+                     wall_to_target=wall_to_target(res_sync.accuracy,
+                                                   wall_sync, target)),
+        "async": dict(final=res_async.final_acc, peak=res_async.peak_acc,
+                      wall_total=float(wall_async[-1]),
+                      wall_to_target=wall_to_target(res_async.accuracy,
+                                                    wall_async, target),
+                      mean_staleness=float(res_async.round_staleness.mean())),
+    }
+    for name, row in rows.items():
+        emit(f"{name}_K{clients}", row["wall_total"] / rounds * 1e6,
+             {"rounds": rounds, **{k: float(v) for k, v in row.items()}})
+    speedup = rows["sync"]["wall_to_target"] / rows["async"]["wall_to_target"]
+    print(f"# target {target:.4f} ({target_frac:.0%} of sync final)  "
+          f"wall-clock speedup to target: {speedup:.2f}x")
+    return {
+        "config": dict(clients=clients, rounds=rounds,
+                       straggler_factor=factor, straggler_frac=frac,
+                       deadline=deadline, over_select_frac=over_select,
+                       target=target, smoke=quick),
+        "sync": {**rows["sync"], "accuracy": res_sync.accuracy,
+                 "wall_clock": wall_sync},
+        "async": {**rows["async"], "accuracy": res_async.accuracy,
+                  "wall_clock": wall_async,
+                  "round_staleness": res_async.round_staleness},
+        "wall_speedup_to_target": speedup,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-K CI guard: fails loudly, finishes in ~2 min")
+    ap.add_argument("--clients", type=int, default=0, help="0 = preset")
+    ap.add_argument("--rounds", type=int, default=0, help="0 = preset")
+    ap.add_argument("--straggler-factor", type=float, default=10.0)
+    ap.add_argument("--straggler-frac", type=float, default=0.2)
+    ap.add_argument("--deadline", type=float, default=1.5)
+    ap.add_argument("--over-select", type=float, default=0.5)
+    ap.add_argument("--target-frac", type=float, default=0.8)
+    args = ap.parse_args()
+
+    clients = args.clients or (8 if args.smoke else 12)
+    rounds = args.rounds or (10 if args.smoke else 40)
+    payload = run_table(quick=args.smoke, clients=clients, rounds=rounds,
+                        factor=args.straggler_factor, frac=args.straggler_frac,
+                        deadline=args.deadline, over_select=args.over_select,
+                        target_frac=args.target_frac,
+                        steps=2 if args.smoke else 4)
+    emit_bench_json("async", payload)
+
+    if not math.isfinite(payload["wall_speedup_to_target"]):
+        raise SystemExit("REGRESSION: async never reached the target accuracy")
+    if payload["wall_speedup_to_target"] <= 1.0:
+        raise SystemExit(
+            f"REGRESSION: async wall-clock-to-target speedup is "
+            f"{payload['wall_speedup_to_target']:.2f}x (expected > 1x under a "
+            f"{args.straggler_factor:.0f}x straggler profile)")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,15 +6,23 @@ composable round engine and prints the paper's metrics: peak / final /
 stable accuracy + stability drop.
 
     PYTHONPATH=src python examples/quickstart.py [--rounds 20]
+
+``--round-policy async`` switches to event-driven asynchronous rounds on a
+virtual wall clock (deadline-closed, over-selected, staleness-weighted
+buffered aggregation); add ``--straggler-factor 10`` to make every fifth
+client 10× slower and watch async win on simulated wall-clock.
 """
 
 import argparse
 import dataclasses
+import math
+
+import numpy as np
 
 from repro.configs.base import FedConfig
 from repro.configs.registry import get_config, smoke_variant
 from repro.data import make_vision_data
-from repro.fed import FederatedSpec
+from repro.fed import AsyncConfig, FederatedSpec
 from repro.models import build_model
 
 
@@ -28,7 +36,14 @@ def main():
                     default=None, choices=["batched", "sequential"],
                     help="override FedConfig.client_execution")
     ap.add_argument("--aggregator", default="fedavg",
-                    choices=["fedavg", "fedavg_weighted", "fedavgm"])
+                    choices=["fedavg", "fedavg_weighted", "fedavgm", "fedbuff"])
+    ap.add_argument("--round-policy", default="sync", choices=["sync", "async"])
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="async round deadline (0 = wait for the full cohort)")
+    ap.add_argument("--over-select", type=float, default=0.0,
+                    help="async over-selection fraction ε")
+    ap.add_argument("--straggler-factor", type=float, default=1.0,
+                    help="every 5th client is this many times slower")
     args = ap.parse_args()
 
     fed = FedConfig(num_clients=12, participation=0.5, rounds=args.rounds,
@@ -38,16 +53,34 @@ def main():
     model = build_model(dataclasses.replace(
         smoke_variant(get_config("resnet18-cifar10")), d_model=8))
 
+    system = None
+    async_cfg = None
+    if args.straggler_factor != 1.0:
+        if args.round_policy != "async":
+            ap.error("--straggler-factor only takes effect with "
+                     "--round-policy async (sync rounds have no clock)")
+        system = np.ones(fed.num_clients)
+        system[::5] = args.straggler_factor
+    if args.round_policy == "async":
+        async_cfg = AsyncConfig(
+            deadline=args.deadline if args.deadline > 0 else math.inf,
+            over_select_frac=args.over_select)
+
     print(f"selector={args.selector}  clients={fed.num_clients}  "
-          f"m={fed.num_selected}/round  mu={fed.mu}")
+          f"m={fed.num_selected}/round  mu={fed.mu}  policy={args.round_policy}")
     spec = FederatedSpec(model, fed, data, selector=args.selector,
                          steps_per_round=4, executor=args.executor,
-                         aggregator=args.aggregator, verbose=True)
+                         aggregator=args.aggregator, verbose=True,
+                         round_policy=args.round_policy, async_cfg=async_cfg,
+                         system=system)
     res = spec.build().run()
     print(f"\n== paper metrics (eval metric: {res.metric_name}) ==")
     for k, v in res.summary().items():
         print(f"  {k:16s} {v:.4f}")
     print(f"  selection counts: {res.selection_counts.tolist()}")
+    if res.wall_clock is not None and len(res.wall_clock):
+        print(f"  simulated wall-clock: {res.wall_clock[-1]:.2f} units, "
+              f"mean update staleness {float(res.round_staleness.mean()):.2f}")
 
 
 if __name__ == "__main__":

@@ -154,6 +154,14 @@ class FedConfig:
     # With 'batched': >0 caps the per-call cohort at this many clients
     # (fixed-shape chunks, one compile; bounds memory when m is large).
     client_chunk: int = 0
+    # Round management (docs/architecture.md §2b):
+    #   'sync'  — every round blocks on the slowest selected client (the
+    #             paper's Algorithm 1; default).
+    #   'async' — event-driven rounds on a virtual wall clock: deadline-
+    #             closed, over-selected, buffered staleness-aware
+    #             aggregation (fed/async_engine.py). Deadline/ε/staleness
+    #             knobs live in fed.async_engine.AsyncConfig (spec field).
+    round_policy: str = "sync"
 
     @property
     def num_selected(self) -> int:

@@ -17,7 +17,7 @@ Component ranges (paper):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -93,9 +93,26 @@ def fairness(state: ClientState, cfg: HeteRoScoreConfig) -> jax.Array:
     return (1.0 + cfg.eta * h / hmax) ** (-2)
 
 
-def staleness_factor(state: ClientState, round_idx: jax.Array, cfg: HeteRoScoreConfig) -> jax.Array:
-    """Eq (7): St_k = 1 + γ · log(1 + min(t − l_k, T_max)) ∈ [1, 1+γ·log(1+T_max)]."""
-    delta = jnp.minimum(_staleness(state, round_idx), cfg.t_max).astype(jnp.float32)
+def staleness_factor(
+    state: ClientState,
+    round_idx: jax.Array,
+    cfg: HeteRoScoreConfig,
+    override: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Eq (7): St_k = 1 + γ · log(1 + min(Δ_k, T_max)) ∈ [1, 1+γ·log(1+T_max)].
+
+    Δ_k defaults to the round counter t − l_k. ``override`` substitutes a
+    (K,) float Δ measured externally — the async engine passes model-version
+    staleness derived from its virtual wall clock (elapsed virtual time since
+    the client's last aggregated update, in units of the reference round
+    duration), so the freshness bonus tracks real wall-clock gaps instead of
+    synchronous round counts.
+    """
+    if override is None:
+        delta = _staleness(state, round_idx).astype(jnp.float32)
+    else:
+        delta = jnp.maximum(jnp.asarray(override, jnp.float32), 0.0)
+    delta = jnp.minimum(delta, jnp.float32(cfg.t_max))
     return 1.0 + cfg.gamma * jnp.log1p(delta)
 
 
@@ -115,15 +132,24 @@ def norm_penalty(state: ClientState, cfg: HeteRoScoreConfig) -> jax.Array:
 
 
 def compute_score_components(
-    state: ClientState, round_idx: jax.Array, cfg: HeteRoScoreConfig
+    state: ClientState,
+    round_idx: jax.Array,
+    cfg: HeteRoScoreConfig,
+    *,
+    staleness_override: Optional[jax.Array] = None,
 ) -> Dict[str, jax.Array]:
-    """All six multiplicative-form components as a dict of (K,) arrays."""
+    """All six multiplicative-form components as a dict of (K,) arrays.
+
+    ``staleness_override`` replaces the round-counter Δ in the freshness
+    term with an externally measured (K,) staleness (see
+    :func:`staleness_factor`).
+    """
     return {
         "value": information_value(state),
         "diversity": diversity(state, round_idx, cfg),
         "momentum": momentum(state),
         "fairness": fairness(state, cfg),
-        "staleness": staleness_factor(state, round_idx, cfg),
+        "staleness": staleness_factor(state, round_idx, cfg, staleness_override),
         "norm": norm_penalty(state, cfg),
     }
 
@@ -162,9 +188,11 @@ def compute_scores(
     cfg: HeteRoScoreConfig,
     *,
     additive: bool = True,
+    staleness_override: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Full HeteRo-Select score S_k(t) for every client (paper Eq 1 / Eq 2)."""
-    comp = compute_score_components(state, round_idx, cfg)
+    comp = compute_score_components(state, round_idx, cfg,
+                                    staleness_override=staleness_override)
     if additive:
         return combine_additive(comp, cfg)
     return combine_multiplicative(comp, cfg)

@@ -33,6 +33,12 @@ from repro.core.scoring import HeteRoScoreConfig, compute_scores
 from repro.core.state import ClientState, staleness as _staleness
 
 SelectFn = Callable[[jax.Array, ClientState, jax.Array], Tuple[jax.Array, jax.Array]]
+# Async variant: a fourth (K,) float argument carries real per-client
+# staleness measured by the virtual wall clock (fed.clock) instead of the
+# round counter — see make_async_selector.
+AsyncSelectFn = Callable[
+    [jax.Array, ClientState, jax.Array, jax.Array], Tuple[jax.Array, jax.Array]
+]
 
 
 @jax.tree_util.register_dataclass
@@ -89,6 +95,7 @@ def heterosel_select(
     *,
     sel_cfg: SelectorConfig,
     score_cfg: HeteRoScoreConfig,
+    staleness_override: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """HeteRo-Select: Algorithm 1, phases 1–2.
 
@@ -96,11 +103,21 @@ def heterosel_select(
     as the single-pass Pallas kernel over the struct-of-arrays state
     (``kernels.score_select``) — the production large-K path; interpret mode
     keeps it runnable (and tested) on CPU. Additive form only.
+
+    ``staleness_override`` substitutes a (K,) clock-measured staleness for
+    the round counter in the freshness term (Eq 7) — the async engine's
+    path. The fused kernel reads the round counter inside the kernel, so the
+    two are mutually exclusive.
     """
     tau = dynamic_temperature(round_idx, sel_cfg)
     if sel_cfg.use_fused_kernel:
         if not sel_cfg.additive:
             raise ValueError("fused scoring kernel implements the additive form only")
+        if staleness_override is not None:
+            raise ValueError(
+                "fused scoring kernel computes staleness from the round "
+                "counter in-kernel and cannot take an async clock override; "
+                "use selector='heterosel' for async runs")
         from repro.kernels import ops as kernel_ops  # deferred: pallas optional
 
         probs, _ = kernel_ops.heterosel_probs(
@@ -108,7 +125,9 @@ def heterosel_select(
             interpret=jax.default_backend() != "tpu",
         )
     else:
-        scores = compute_scores(state, round_idx, score_cfg, additive=sel_cfg.additive)
+        scores = compute_scores(state, round_idx, score_cfg,
+                                additive=sel_cfg.additive,
+                                staleness_override=staleness_override)
         probs = selection_probabilities(scores, tau)
     mask = sample_clients(key, probs, sel_cfg.num_selected)
     return mask, probs
@@ -150,6 +169,7 @@ def power_of_choice_select(
 def oort_select(
     key: jax.Array, state: ClientState, round_idx: jax.Array, *,
     sel_cfg: SelectorConfig, speeds: Optional[jax.Array] = None,
+    staleness_override: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Oort's guided selection: statistical × system utility + explore split.
 
@@ -158,6 +178,8 @@ def oort_select(
     (``speeds`` = T_pref/t_k from fed.availability.SystemProfile; omit for a
     homogeneous fleet). A fraction ε of the m slots goes to never-explored
     clients chosen uniformly; the exploit slots are greedy top-by-utility.
+    ``staleness_override`` replaces the round-counter staleness with the
+    async clock's measurement (make_async_selector threads it).
     """
     k = state.num_clients
     m = sel_cfg.num_selected
@@ -165,7 +187,10 @@ def oort_select(
     m_exploit = m - m_explore
     kx, ke = jax.random.split(key)
 
-    stale = _staleness(state, round_idx).astype(jnp.float32)
+    if staleness_override is None:
+        stale = _staleness(state, round_idx).astype(jnp.float32)
+    else:
+        stale = jnp.maximum(jnp.asarray(staleness_override, jnp.float32), 0.0)
     util = state.loss_prev * (1.0 + sel_cfg.oort_staleness_coef * jnp.sqrt(jnp.minimum(stale, 100.0)))
     if speeds is not None:
         sys_util = jnp.minimum(jnp.asarray(speeds, jnp.float32), 1.0) ** sel_cfg.oort_system_alpha
@@ -213,6 +238,58 @@ def make_selector(
         return functools.partial(power_of_choice_select, sel_cfg=sel_cfg)
     if name == "oort":
         return functools.partial(oort_select, sel_cfg=sel_cfg, speeds=speeds)
+    raise ValueError(f"unknown selector '{name}'")
+
+
+def make_async_selector(
+    name: str,
+    sel_cfg: SelectorConfig,
+    score_cfg: HeteRoScoreConfig | None = None,
+    *,
+    speeds: Optional[jax.Array] = None,
+) -> AsyncSelectFn:
+    """Factory for 4-arg selectors: ``(key, state, round_idx, staleness)``.
+
+    The async engine (``fed.async_engine``) measures per-client staleness on
+    its virtual wall clock — elapsed time since the client's update was last
+    aggregated, in units of the reference round duration — and passes it
+    here each dispatch; the HeteRo-Select freshness bonus (Eq 7) and Oort's
+    staleness term then reward genuinely stale clients instead of trusting
+    synchronous round counters. Selectors with no freshness term (random,
+    power_of_choice) accept and ignore the extra argument, so every selector
+    name works in async mode except ``heterosel_pallas`` (the fused kernel
+    computes staleness in-kernel from the round counter).
+    """
+    score_cfg = score_cfg or HeteRoScoreConfig()
+    if name == "heterosel_pallas":
+        raise ValueError(
+            "selector='heterosel_pallas' computes staleness in-kernel from "
+            "the round counter and cannot consume the async clock; use "
+            "'heterosel' for async runs")
+    if name in ("heterosel", "heterosel_mult"):
+        cfg = sel_cfg if name == "heterosel" else dataclasses.replace(
+            sel_cfg, additive=False)
+
+        def heterosel_async(key, state, round_idx, stale):
+            return heterosel_select(key, state, round_idx, sel_cfg=cfg,
+                                    score_cfg=score_cfg,
+                                    staleness_override=stale)
+
+        return heterosel_async
+    if name == "oort":
+
+        def oort_async(key, state, round_idx, stale):
+            return oort_select(key, state, round_idx, sel_cfg=sel_cfg,
+                               speeds=speeds, staleness_override=stale)
+
+        return oort_async
+    if name in ("random", "power_of_choice"):
+        base = make_selector(name, sel_cfg, score_cfg)
+
+        def stateless_async(key, state, round_idx, stale):
+            return base(key, state, round_idx)
+
+        return stateless_async
     raise ValueError(f"unknown selector '{name}'")
 
 

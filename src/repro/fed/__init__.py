@@ -1,12 +1,20 @@
 """Federated substrate: partitioning, FedProx clients, the composable round
 engine (executors / aggregators / hooks), batched cohort execution,
-aggregation, and the backwards-compatible ``run_federated`` wrapper."""
+synchronous and event-driven asynchronous round management, aggregation,
+and the backwards-compatible ``run_federated`` wrapper."""
 
+from repro.fed.async_engine import (
+    AsyncConfig,
+    AsyncFederatedEngine,
+    BufferedAggregator,
+    staleness_weights,
+)
 from repro.fed.batched import (
     make_batched_local_train,
     stack_client_trees,
     train_clients_batched,
 )
+from repro.fed.clock import Completion, LatencyModel, VirtualClock
 from repro.fed.engine import (
     AGGREGATORS,
     EXECUTORS,
@@ -63,6 +71,14 @@ __all__ = [
     "register_executor",
     "register_aggregator",
     "register_hook",
+    # async federation
+    "AsyncConfig",
+    "AsyncFederatedEngine",
+    "BufferedAggregator",
+    "staleness_weights",
+    "VirtualClock",
+    "LatencyModel",
+    "Completion",
     # legacy wrapper + batched primitives
     "run_federated",
     "make_batched_local_train",

@@ -25,7 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.selection import SelectFn, sample_clients
+from repro.core.selection import AsyncSelectFn, SelectFn, sample_clients
 
 
 @dataclasses.dataclass
@@ -70,6 +70,20 @@ class SystemProfile:
         return float(sp[sel].max()) if len(sel) else 0.0
 
 
+def _remask(key, probs, avail, num_selected: int):
+    """Zero unavailable clients' mass and re-sample the m slots (jit-safe)."""
+    m = num_selected or int(probs.shape[0] // 2)
+    probs = jnp.where(avail, probs, 0.0)
+    norm = jnp.sum(probs)
+    # fall back to uniform-over-available if the selector's mass vanished
+    probs = jnp.where(
+        norm > 1e-9, probs / jnp.maximum(norm, 1e-9),
+        avail.astype(jnp.float32) / jnp.maximum(jnp.sum(avail), 1),
+    )
+    new_mask = sample_clients(jax.random.fold_in(key, 1), probs, m)
+    return new_mask & avail, probs
+
+
 def mask_selector(select: SelectFn, availability: jnp.ndarray,
                   num_selected: int = 0) -> SelectFn:
     """Restrict any selector to the available set A_t (paper's A_t notation).
@@ -82,17 +96,24 @@ def mask_selector(select: SelectFn, availability: jnp.ndarray,
     """
 
     def wrapped(key, state, round_idx):
-        mask, probs = select(key, state, round_idx)
-        m = num_selected or int(mask.shape[0] // 2)
-        avail = availability[round_idx]
-        probs = jnp.where(avail, probs, 0.0)
-        norm = jnp.sum(probs)
-        # fall back to uniform-over-available if the selector's mass vanished
-        probs = jnp.where(
-            norm > 1e-9, probs / jnp.maximum(norm, 1e-9),
-            avail.astype(jnp.float32) / jnp.maximum(jnp.sum(avail), 1),
-        )
-        new_mask = sample_clients(jax.random.fold_in(key, 1), probs, m)
-        return new_mask & avail, probs
+        _, probs = select(key, state, round_idx)
+        return _remask(key, probs, availability[round_idx], num_selected)
+
+    return wrapped
+
+
+def mask_async_selector(select: AsyncSelectFn, availability: jnp.ndarray,
+                        num_selected: int = 0) -> AsyncSelectFn:
+    """``mask_selector`` for the async engine's 4-arg selectors.
+
+    Identical churn semantics; the clock-measured staleness vector passes
+    through to the wrapped selector untouched, so an offline client keeps
+    accruing real staleness and gets the Eq-7 freshness bonus the moment it
+    reappears in A_t.
+    """
+
+    def wrapped(key, state, round_idx, staleness):
+        _, probs = select(key, state, round_idx, staleness)
+        return _remask(key, probs, availability[round_idx], num_selected)
 
     return wrapped

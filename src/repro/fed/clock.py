@@ -1,0 +1,159 @@
+"""Event-driven virtual wall clock for asynchronous federation.
+
+The synchronous engine's notion of time is the round counter: every round
+costs "1" regardless of who was selected, so system heterogeneity
+(stragglers, slow networks) is invisible. This module supplies the missing
+time axis for ``fed.async_engine``:
+
+  * ``VirtualClock``  — a min-heap of future client completions plus the
+    current virtual time. Events pop in ``(time, seq)`` order, where ``seq``
+    is insertion order, so two completions at the same instant resolve
+    deterministically — a fixed seed yields an identical event sequence.
+  * ``Completion``    — one client's local-training completion: when it
+    lands, who it came from, which dispatch round it belongs to, and an
+    opaque payload (the async engine stores the pending update there).
+  * ``LatencyModel``  — per-client completion latencies: a base round
+    duration scaled by per-client time multipliers (``SystemProfile.speeds``
+    from ``fed.availability`` — log-normal, larger = slower) and optional
+    log-normal per-dispatch jitter. With ``jitter=0`` no RNG is consumed,
+    which is what makes the equal-latency async run replay the synchronous
+    selection stream exactly (tests/test_async_engine.py).
+
+Nothing here touches jax: the clock is host-side control plane, exactly like
+the sequential parts of Algorithm 1. Device work stays fused in the batched
+executor; the clock only decides *when* each already-computed update is
+allowed to reach the server.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(order=True)
+class Completion:
+    """One scheduled client completion in virtual time.
+
+    Ordering is ``(time, seq)`` — payload and identity fields are excluded
+    from comparison so the heap never compares pytrees.
+    """
+
+    time: float
+    seq: int
+    client: int = dataclasses.field(compare=False)
+    dispatch_round: int = dataclasses.field(compare=False)
+    payload: Any = dataclasses.field(compare=False, default=None)
+
+
+class VirtualClock:
+    """Simulated wall clock + pending-completion event queue.
+
+    The async engine schedules one ``Completion`` per dispatched client and
+    pops everything due by the round's closing time. ``now`` only moves
+    forward (``advance_to`` is monotone), so round close times are a
+    non-decreasing series — the ``FLResult.wall_clock`` axis.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+        self._heap: List[Completion] = []
+        self._seq = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def schedule(self, delay: float, client: int, dispatch_round: int,
+                 payload: Any = None) -> Completion:
+        """Enqueue a completion ``delay`` time units from now (delay ≥ 0)."""
+        if delay < 0:
+            raise ValueError(f"completion delay must be ≥ 0, got {delay}")
+        ev = Completion(time=self.now + float(delay), seq=next(self._seq),
+                        client=int(client), dispatch_round=int(dispatch_round),
+                        payload=payload)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def peek_time(self) -> Optional[float]:
+        """Arrival time of the earliest pending completion, or None."""
+        return self._heap[0].time if self._heap else None
+
+    def latest_time(self) -> Optional[float]:
+        """Arrival time of the latest pending completion, or None.
+
+        The deadline-free (∞) round close: wait for everything in flight.
+        """
+        return max(ev.time for ev in self._heap) if self._heap else None
+
+    def advance_to(self, t: float) -> float:
+        """Move ``now`` forward to ``t`` (never backward); returns ``now``."""
+        self.now = max(self.now, float(t))
+        return self.now
+
+    def pop_due(self, until: float) -> List[Completion]:
+        """Advance to ``until`` and return every completion with time ≤ it.
+
+        Events come back in ``(time, seq)`` order. The clock lands on
+        ``until`` even when fewer (or zero) events were due — that is the
+        deadline semantics: the round costs its full duration regardless of
+        how many clients made it.
+        """
+        self.advance_to(until)
+        due: List[Completion] = []
+        while self._heap and self._heap[0].time <= self.now:
+            due.append(heapq.heappop(self._heap))
+        return due
+
+    def drain(self) -> List[Completion]:
+        """Pop everything still pending (end-of-run accounting)."""
+        out = []
+        while self._heap:
+            out.append(heapq.heappop(self._heap))
+        if out:
+            self.advance_to(out[-1].time)
+        return out
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    """Per-client completion latency: ``base × multiplier_k × jitter``.
+
+    ``multipliers`` is a (K,) array of per-client round-time multipliers —
+    ``SystemProfile.speeds()`` in ``fed.availability`` draws them log-normal
+    (compute × network), larger = slower. ``jitter > 0`` adds per-dispatch
+    log-normal noise of that sigma; it draws from the generator the engine
+    passes in, so keep it 0 when bit-replaying the synchronous RNG stream.
+    """
+
+    multipliers: np.ndarray
+    base: float = 1.0
+    jitter: float = 0.0
+
+    def __post_init__(self):
+        self.multipliers = np.asarray(self.multipliers, np.float64)
+        if self.multipliers.ndim != 1:
+            raise ValueError("latency multipliers must be a (K,) vector")
+        if np.any(self.multipliers <= 0) or self.base <= 0:
+            raise ValueError("latencies must be strictly positive")
+
+    @property
+    def num_clients(self) -> int:
+        return self.multipliers.shape[0]
+
+    def sample(self, clients: np.ndarray,
+               rng: Optional[np.random.Generator] = None) -> np.ndarray:
+        """Latencies for one dispatch cohort, in virtual-time units."""
+        lat = self.base * self.multipliers[np.asarray(clients, np.int64)]
+        if self.jitter > 0.0:
+            if rng is None:
+                raise ValueError("jitter > 0 requires an RNG")
+            lat = lat * np.exp(rng.normal(0.0, self.jitter, size=lat.shape))
+        return lat
+
+    def reference_time(self) -> float:
+        """Median cohort latency — the deadline/staleness unit of account."""
+        return float(self.base * np.median(self.multipliers))

@@ -102,6 +102,11 @@ class FLResult:
     raw_bytes: int = 0
     mu_history: Optional[np.ndarray] = None  # adaptive-μ trace
     metric_name: str = "accuracy"
+    # Async-mode extras (fed.async_engine): virtual close time of each round
+    # and the mean staleness of the updates aggregated in it. None for sync
+    # runs, where every round costs "1" and staleness is always 0.
+    wall_clock: Optional[np.ndarray] = None
+    round_staleness: Optional[np.ndarray] = None
 
     @property
     def peak_acc(self) -> float:
@@ -166,11 +171,19 @@ def default_metric_name(model: Any) -> str:
 class CohortUpdates:
     """One round's cohort outcome, in whichever layout the executor produced.
 
-    Exactly one of ``avg_params`` / ``param_list`` is required for
-    aggregation: the batched engine ships the fused weighted mean (plus,
-    optionally, the (M, ...) client stack), the sequential engine a Python
-    list in cohort order. ``mean_loss`` / ``update_sqnorm`` are (M,) in
-    cohort order — jax arrays from the batched path, numpy from sequential.
+    Exactly one of ``avg_params`` / ``param_list`` / ``delta_list`` is
+    required for aggregation: the batched engine ships the fused weighted
+    mean (plus, optionally, the (M, ...) client stack), the sequential
+    engine a Python list in cohort order. ``mean_loss`` / ``update_sqnorm``
+    are (M,) in cohort order — jax arrays from the batched path, numpy from
+    sequential.
+
+    The async engine aggregates *arrivals*, not cohorts: ``delta_list``
+    carries per-update parameter deltas Δ_i = w_i − w_anchor(i), each
+    relative to the global version its client trained on, and ``staleness``
+    the (M,) model-version lag of each update at aggregation time (0 for
+    updates landing in their own dispatch round). Staleness-aware
+    aggregators (``BufferedAggregator``) consume both.
     """
 
     mean_loss: Any
@@ -181,6 +194,8 @@ class CohortUpdates:
     weights: Optional[Any] = None  # the aggregator-provided cohort weights
     wire_bytes: int = 0
     raw_bytes: int = 0
+    delta_list: Optional[List[Any]] = None  # async: per-update deltas
+    staleness: Optional[np.ndarray] = None  # async: (M,) version lag
 
 
 @runtime_checkable
@@ -211,6 +226,10 @@ class Aggregator:
     """
 
     name = "base"
+    # Whether reduce() understands delta-form cohorts (delta_list +
+    # staleness) — required by the async engine, whose arrivals are deltas
+    # against *different* global versions and cannot be plainly averaged.
+    supports_deltas = False
 
     def cohort_weights(self, selected: np.ndarray, data: Any) -> Optional[jax.Array]:
         return None
@@ -280,6 +299,12 @@ class RoundContext:
     obs_sqnorm: Optional[np.ndarray] = None
     metric: float = 0.0                     # this round's eval metric
     train_loss: float = 0.0
+    # Async-mode fields (0 in sync runs): virtual time at round close, how
+    # many updates were aggregated, and how many of those were carried-over
+    # straggler arrivals from earlier dispatch rounds.
+    sim_time: float = 0.0
+    num_arrivals: int = 0
+    num_stragglers: int = 0
 
     @property
     def fed(self) -> FedConfig:
@@ -765,6 +790,15 @@ class FederatedSpec:
     mesh: Optional[Any] = None
     mesh_axes: Optional[MeshAxes] = None
     verbose: bool = False
+    # Round management: None defers to fed.round_policy ('sync' | 'async').
+    # 'async' builds an AsyncFederatedEngine (fed.async_engine): event-driven
+    # virtual clock, deadline-closed rounds with over-selection, buffered
+    # staleness-aware aggregation. ``system`` supplies per-client round-time
+    # multipliers (a fed.availability.SystemProfile or a (K,) array);
+    # ``async_cfg`` the deadline/over-selection/staleness knobs.
+    round_policy: Optional[str] = None
+    async_cfg: Optional[Any] = None      # fed.async_engine.AsyncConfig
+    system: Optional[Any] = None         # SystemProfile | (K,) multipliers
 
     @property
     def resolved_steps(self) -> int:
@@ -774,7 +808,26 @@ class FederatedSpec:
     def resolved_selector(self) -> str:
         return self.selector or self.fed.selector
 
+    @property
+    def resolved_round_policy(self) -> str:
+        return self.round_policy or getattr(self.fed, "round_policy", "sync")
+
     def build(self) -> "FederatedEngine":
+        policy = self.resolved_round_policy
+        if policy == "async":
+            from repro.fed.async_engine import AsyncFederatedEngine
+
+            return AsyncFederatedEngine(self)
+        if policy != "sync":
+            raise ValueError(
+                f"round_policy must be 'sync' or 'async', got {policy!r}")
+        if self.async_cfg is not None or self.system is not None:
+            # The sync engine has no clock: silently modeling a homogeneous
+            # instant fleet while the config says otherwise is how wrong
+            # conclusions get drawn. Loud, like every other bad combination.
+            raise ValueError(
+                "async_cfg/system are only consumed by round_policy='async'; "
+                "the sync engine has no wall clock to apply them to")
         return FederatedEngine(self)
 
 
@@ -986,6 +1039,8 @@ class FederatedEngine:
             raw_bytes=self.raw_total,
             mu_history=extras.get("mu_history"),
             metric_name=self.metric_name,
+            wall_clock=extras.get("wall_clock"),
+            round_staleness=extras.get("round_staleness"),
         )
 
     # -- checkpoint / resume ----------------------------------------------

@@ -52,6 +52,9 @@ def run_federated(
     mesh: Optional[Any] = None,              # multi-device cohort sharding
     mesh_axes: Optional[MeshAxes] = None,    # .pod names the client axis
     verbose: bool = False,
+    round_policy: Optional[str] = None,      # None ⇒ fed.round_policy
+    async_cfg: Optional[Any] = None,         # fed.async_engine.AsyncConfig
+    system: Optional[Any] = None,            # SystemProfile | (K,) multipliers
 ) -> FLResult:
     """Run ``fed.rounds`` federated rounds and collect paper metrics.
 
@@ -65,6 +68,12 @@ def run_federated(
     (per-client host residuals) — requesting it with an *explicit*
     ``client_execution='batched'`` raises, while the config-default batched
     schedule downgrades with an explicit warning.
+
+    ``round_policy='async'`` (or ``fed.round_policy``) runs event-driven
+    asynchronous rounds on a virtual wall clock — deadline-closed,
+    over-selected, staleness-weighted buffered aggregation — with
+    per-client latencies from ``system`` and knobs in ``async_cfg``
+    (``fed.async_engine.AsyncConfig``; docs/architecture.md §2b).
     """
     hooks = ["adaptive_mu"] if adaptive_mu else []
     spec = FederatedSpec(
@@ -85,5 +94,8 @@ def run_federated(
         mesh=mesh,
         mesh_axes=mesh_axes,
         verbose=verbose,
+        round_policy=round_policy,
+        async_cfg=async_cfg,
+        system=system,
     )
     return spec.build().run()

@@ -68,6 +68,28 @@ def fedavg_fused(stacked_params: Any, weights: Optional[jax.Array] = None) -> An
     )
 
 
+def apply_weighted_deltas(global_params: Any, deltas: Sequence[Any],
+                          weights: jax.Array, server_lr: float = 1.0) -> Any:
+    """w ← w + η_s · Σ_i w̄_i Δ_i — the buffered-async server step.
+
+    ``deltas`` are per-update parameter deltas Δ_i = w_i − w_anchor(i), each
+    relative to the global model version the producing client trained on (so
+    stale arrivals apply cleanly to a newer global). Weights are normalized
+    to sum to 1 here; ``fed.async_engine.BufferedAggregator`` computes them
+    as polynomial staleness discounts. Accumulation runs in f32, output
+    leaves keep the param dtype. With uniform weights, zero staleness and
+    η_s = 1 this reduces to FedAvg up to float reassociation.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1e-30)
+
+    def upd(g, *ds):
+        s = sum(wi * d.astype(jnp.float32) for wi, d in zip(w, ds))
+        return (g.astype(jnp.float32) + server_lr * s).astype(g.dtype)
+
+    return jax.tree_util.tree_map(upd, global_params, *deltas)
+
+
 def fedavg_stacked(stacked_params: Any, axis_name: Optional[str] = None) -> Any:
     """FedAvg over a leading client axis (the multi-pod 'pod'-axis path).
 

@@ -21,13 +21,15 @@ same directory resumes where the killed run stopped.
 from __future__ import annotations
 
 import argparse
+import math
 
 import jax
 
 from repro.configs.base import FedConfig
 from repro.configs.registry import get_config, smoke_variant
 from repro.data import make_lm_data, make_vision_data
-from repro.fed import CheckpointHook, FederatedSpec
+from repro.fed import AsyncConfig, CheckpointHook, FederatedSpec
+from repro.fed.availability import SystemProfile
 from repro.models import build_model
 from repro.ckpt import save_checkpoint
 
@@ -48,6 +50,16 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None,
                     help="enable mid-run checkpoint/resume under this dir")
     ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--round-policy", default="sync", choices=["sync", "async"],
+                    help="sync barrier rounds vs event-driven async rounds")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="async round deadline in virtual-time units "
+                         "(0 = no deadline: wait for the full cohort)")
+    ap.add_argument("--over-select", type=float, default=0.0,
+                    help="async over-selection fraction ε (dispatch m·(1+ε))")
+    ap.add_argument("--system-sigma", type=float, default=0.0,
+                    help="log-normal sigma of per-client round-time "
+                         "multipliers (0 = homogeneous fleet)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -66,12 +78,30 @@ def main() -> None:
     model = build_model(cfg)
     hooks = []
     if args.ckpt_dir:
+        if args.round_policy == "async":
+            ap.error("--ckpt-dir is not supported with --round-policy async "
+                     "(clock + in-flight buffer are not checkpointed yet)")
         hooks.append(CheckpointHook(args.ckpt_dir, every=args.ckpt_every,
                                     resume=True))
+    if args.system_sigma > 0 and args.round_policy != "async":
+        ap.error("--system-sigma only takes effect with --round-policy async "
+                 "(sync rounds have no clock)")
+    system = (SystemProfile(args.clients, sigma=args.system_sigma, seed=0)
+              if args.system_sigma > 0 else None)
+    async_cfg = None
+    if args.round_policy == "async":
+        async_cfg = AsyncConfig(
+            deadline=args.deadline if args.deadline > 0 else math.inf,
+            over_select_frac=args.over_select)
     spec = FederatedSpec(model, fed, data, steps_per_round=4,
-                         aggregator=args.aggregator, hooks=hooks, verbose=True)
+                         aggregator=args.aggregator, hooks=hooks, verbose=True,
+                         round_policy=args.round_policy, async_cfg=async_cfg,
+                         system=system)
     res = spec.build().run()
     print(f"\nfinal metrics ({res.metric_name}):", res.labeled_summary())
+    if res.wall_clock is not None and len(res.wall_clock):
+        print(f"simulated wall-clock: {res.wall_clock[-1]:.2f} units "
+              f"(mean staleness {float(res.round_staleness.mean()):.2f})")
     if args.ckpt_dir:
         path = save_checkpoint(args.ckpt_dir, res.params, step=fed.rounds,
                                extra=res.summary())

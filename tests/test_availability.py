@@ -1,0 +1,171 @@
+"""Availability / system-heterogeneity unit tests (ISSUE 4 satellite).
+
+Direct coverage for ``fed.availability``: the two-state Markov churn
+simulator (stationarity, seed determinism, quorum guarantee), the
+``SystemProfile`` latency multipliers, and — the paper-relevant part —
+that ``mask_selector`` keeps the staleness bookkeeping accruing for
+offline clients (Eq 7's freshness bonus is exactly for them).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.selection import SelectorConfig, make_selector
+from repro.core.state import (
+    NEVER,
+    init_client_state,
+    staleness,
+    update_client_state,
+)
+from repro.fed.availability import (
+    AvailabilityTrace,
+    SystemProfile,
+    mask_async_selector,
+    mask_selector,
+)
+
+
+class TestAvailabilityTrace:
+    def test_shape_dtype_and_seed_determinism(self):
+        tr = AvailabilityTrace(num_clients=16, seed=3)
+        m1 = tr.masks(40)
+        m2 = AvailabilityTrace(num_clients=16, seed=3).masks(40)
+        m3 = AvailabilityTrace(num_clients=16, seed=4).masks(40)
+        assert m1.shape == (40, 16) and m1.dtype == bool
+        np.testing.assert_array_equal(m1, m2)
+        assert not np.array_equal(m1, m3)
+
+    def test_markov_stationarity(self):
+        """Long-run online fraction → π = p_come / (p_come + 1 − p_stay).
+
+        For the defaults p_stay=0.9, p_come=0.6 that is 0.6/0.7 ≈ 0.857.
+        The chain mixes fast (spectral gap 0.5), so 3000 rounds × 40 clients
+        estimates π to well under ±0.03.
+        """
+        tr = AvailabilityTrace(num_clients=40, p_stay_online=0.9,
+                               p_come_online=0.6, seed=0)
+        m = tr.masks(3000)
+        pi = tr.p_come_online / (tr.p_come_online + 1.0 - tr.p_stay_online)
+        assert abs(m[500:].mean() - pi) < 0.03
+
+    def test_asymmetric_chain_stationarity(self):
+        tr = AvailabilityTrace(num_clients=40, p_stay_online=0.5,
+                               p_come_online=0.1, seed=1)
+        m = tr.masks(4000)
+        pi = 0.1 / (0.1 + 0.5)
+        assert abs(m[500:].mean() - pi) < 0.03
+
+    def test_quorum_guarantee(self):
+        """Even a nearly-dead fleet keeps ≥ 1 client online every round."""
+        tr = AvailabilityTrace(num_clients=12, p_stay_online=0.01,
+                               p_come_online=0.01, seed=2)
+        m = tr.masks(300)
+        assert m.sum(axis=1).min() >= 1
+
+
+class TestSystemProfile:
+    def test_speeds_deterministic_positive(self):
+        sp = SystemProfile(num_clients=50, sigma=0.5, seed=7)
+        s1, s2 = sp.speeds(), sp.speeds()
+        np.testing.assert_array_equal(s1, s2)
+        assert (s1 > 0).all()
+        # log-normal with μ=0: median ≈ 1
+        assert 0.7 < np.median(s1) < 1.4
+
+    def test_round_time_is_straggler_paced(self):
+        sp = SystemProfile(num_clients=8, sigma=0.5, seed=0)
+        speeds = sp.speeds()
+        mask = np.zeros(8, bool)
+        mask[[1, 4, 6]] = True
+        assert sp.round_time(mask) == pytest.approx(speeds[[1, 4, 6]].max())
+        assert sp.round_time(np.zeros(8, bool)) == 0.0
+
+
+def _run_masked_rounds(select, rounds, k):
+    """Drive selection + metadata updates for ``rounds`` rounds; returns the
+    final ClientState and the (rounds, K) selection history."""
+    state = init_client_state(k, jnp.zeros(k, jnp.float32))
+    key = jax.random.PRNGKey(0)
+    hist = np.zeros((rounds, k), bool)
+    for t in range(rounds):
+        key, sk = jax.random.split(key)
+        mask, probs = select(sk, state, jnp.int32(t))
+        mask_np = np.asarray(mask)
+        hist[t] = mask_np
+        state = update_client_state(
+            state, round_idx=jnp.int32(t), selected_mask=jnp.asarray(mask_np),
+            observed_loss=jnp.full(k, 1.0), observed_sqnorm=jnp.full(k, 0.5))
+    return state, hist
+
+
+class TestMaskSelector:
+    def test_offline_clients_never_selected_and_probs_zeroed(self):
+        k, rounds = 8, 12
+        avail = np.ones((rounds, k), bool)
+        avail[:, 0] = False  # client 0 permanently offline
+        base = make_selector("heterosel", SelectorConfig(num_selected=3))
+        select = mask_selector(base, jnp.asarray(avail), num_selected=3)
+        state = init_client_state(k, jnp.zeros(k, jnp.float32))
+        mask, probs = select(jax.random.PRNGKey(1), state, jnp.int32(0))
+        assert float(probs[0]) == 0.0
+        _, hist = _run_masked_rounds(select, rounds, k)
+        assert hist[:, 0].sum() == 0
+        assert (hist.sum(axis=1) == 3).all()  # full cohorts from the rest
+
+    def test_offline_client_accrues_staleness(self):
+        """The paper's A_t semantics: an unavailable client keeps aging.
+
+        Never selected ⇒ ``last_selected`` stays NEVER and the Eq-7 staleness
+        keeps growing with t, while participation stays 0 — exactly the
+        metadata the freshness bonus consumes when the client reappears.
+        """
+        k, rounds = 6, 10
+        avail = np.ones((rounds, k), bool)
+        avail[:, 2] = False
+        base = make_selector("heterosel", SelectorConfig(num_selected=2))
+        select = mask_selector(base, jnp.asarray(avail), num_selected=2)
+        state, hist = _run_masked_rounds(select, rounds, k)
+        assert hist[:, 2].sum() == 0
+        assert int(state.part_count[2]) == 0
+        assert int(state.last_selected[2]) == NEVER
+        stale = staleness(state, jnp.int32(rounds))
+        assert int(stale[2]) == rounds - NEVER  # still aging, huge
+        online_sel = np.asarray(state.last_selected) >= 0
+        assert online_sel.sum() >= 2  # the rest did participate
+
+    def test_short_round_when_fewer_online_than_m(self):
+        k, rounds = 6, 4
+        avail = np.zeros((rounds, k), bool)
+        avail[:, :2] = True  # only 2 online, m=4
+        base = make_selector("random", SelectorConfig(num_selected=4))
+        select = mask_selector(base, jnp.asarray(avail), num_selected=4)
+        _, hist = _run_masked_rounds(select, rounds, k)
+        assert (hist[:, 2:] == 0).all()
+        assert 1 <= hist.sum(axis=1).max() <= 2
+
+    def test_mask_async_selector_matches_and_threads_staleness(self):
+        """The async wrapper applies identical churn; the clock-staleness
+        vector reaches the wrapped selector untouched."""
+        k = 8
+        avail = np.ones((3, k), bool)
+        avail[:, 5] = False
+        seen = {}
+
+        def spy_select(key, state, round_idx, stale):
+            seen["stale"] = stale
+            probs = jnp.full((k,), 1.0 / k, jnp.float32)
+            return jnp.ones((k,), bool), probs
+
+        wrapped = mask_async_selector(spy_select, jnp.asarray(avail),
+                                      num_selected=3)
+        state = init_client_state(k, jnp.zeros(k, jnp.float32))
+        override = jnp.arange(k, dtype=jnp.float32)
+        mask, probs = wrapped(jax.random.PRNGKey(0), state, jnp.int32(1),
+                              override)
+        np.testing.assert_array_equal(np.asarray(seen["stale"]),
+                                      np.asarray(override))
+        assert not bool(mask[5]) and float(probs[5]) == 0.0
+        assert np.asarray(mask).sum() <= 3
