@@ -1,7 +1,7 @@
 """Table 5 (beyond-paper): client-execution scaling — rounds/sec vs K.
 
 Measures one federated round's selected-client training + aggregation for
-the two execution engines (docs/architecture.md §2):
+the two execution engines (docs/engine.md §2–3):
 
   * sequential — one jitted ``local_train`` dispatch per selected client +
     Python-loop FedAvg (the numerical reference path).

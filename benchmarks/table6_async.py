@@ -4,7 +4,7 @@ barrier rounds vs event-driven async rounds under a straggler profile.
 The synchronous engine pays the straggler tax every round: the round lasts
 as long as its slowest selected client, so a 10× straggler in the cohort
 makes the round 10× longer while contributing one update. The async engine
-(docs/architecture.md §2b) over-selects, closes each round at a deadline,
+(docs/async.md) over-selects, closes each round at a deadline,
 and folds late updates in as staleness-discounted arrivals — so its rounds
 cost ~the deadline and the straggler's work is not thrown away.
 

@@ -1,0 +1,164 @@
+"""Table 7 (beyond-paper): WAN communication to target accuracy — flat
+client→cloud selection vs hierarchical client→edge→cloud selection at
+K=1024.
+
+The cost model (docs/hierarchy.md): what matters at cross-device scale is
+the expensive WAN hop into the cloud, in units of one model upload. Flat
+selection ships every selected client's update straight to the cloud —
+m uploads per round. The hierarchical engine aggregates per edge first and
+ships only the E_active edge aggregates — ``FLResult.cloud_uploads`` — so
+the WAN bill per round drops from m to ~E while the same m clients still
+train (inner per-edge budgets sum to m). Client→edge traffic rides the
+cheap LAN tier and is reported separately, not counted against the WAN
+budget.
+
+Both runs use the identical federation (lazy Dirichlet label-skew
+generator), model (the table-5 MLP probe — the cross-device regime the
+large-K claim is about), selector and seeds; the only difference is
+``FedConfig.topology``.
+
+    PYTHONPATH=src python benchmarks/table7_hierarchy.py            # K=1024
+    PYTHONPATH=src python benchmarks/table7_hierarchy.py --smoke    # CI guard
+
+CSV columns: name,us_per_round,derived(rounds;final;wan_total;
+wan_to_target). Machine-readable record: BENCH_hierarchy.json via the
+shared emitter (benchmarks/common.py: emit_bench_json).
+
+Acceptance (ISSUE 5): hierarchical reaches the target accuracy on less
+cumulative WAN communication than flat at K=1024.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+try:  # package-style (benchmarks/run.py) or direct execution from benchmarks/
+    from benchmarks.common import emit, emit_bench_json
+    from benchmarks.table5_scaling import IMAGE_SIZE, MLPProbe
+except ImportError:
+    from common import emit, emit_bench_json
+    from table5_scaling import IMAGE_SIZE, MLPProbe
+
+from repro.configs.base import FedConfig
+from repro.data import make_lazy_vision_data
+from repro.fed import FederatedSpec
+
+
+def mlp_accuracy(model, params, batch) -> float:
+    """Eval for the MLP probe (no ``.cfg.family`` — explicit eval_fn)."""
+    x = batch["images"].reshape(batch["images"].shape[0], -1)
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    logits = h @ params["w2"] + params["b2"]
+    return float(jnp.mean(
+        (jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32)))
+
+
+def comm_to_target(acc: np.ndarray, uploads: np.ndarray, target: float) -> float:
+    """Cumulative WAN uploads when the accuracy series first hits target."""
+    cum = np.cumsum(np.asarray(uploads, np.float64))
+    hit = np.flatnonzero(np.asarray(acc) >= target)
+    return float(cum[hit[0]]) if len(hit) else math.inf
+
+
+def run_table(*, clients: int, edges: int, rounds: int, participation: float,
+              steps: int, batch: int, target_frac: float, smoke: bool) -> dict:
+    fed = FedConfig(num_clients=clients, participation=participation,
+                    rounds=rounds, local_batch=batch, lr=0.1, mu=0.1,
+                    dirichlet_alpha=0.1, seed=0)
+    data = make_lazy_vision_data(fed, image_size=IMAGE_SIZE, test_per_class=16)
+    model = MLPProbe(IMAGE_SIZE)
+
+    t0 = time.time()
+    res_flat = FederatedSpec(model, fed, data, selector="heterosel",
+                             steps_per_round=steps, eval_fn=mlp_accuracy,
+                             metric_name="accuracy").build().run()
+    dt_flat = time.time() - t0
+    # Flat WAN bill: every selected client uploads straight to the cloud.
+    uploads_flat = res_flat.selected_history.sum(axis=1).astype(np.float64)
+
+    hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=edges)
+    t0 = time.time()
+    res_hier = FederatedSpec(model, hfed, data, selector="heterosel",
+                             steps_per_round=steps, eval_fn=mlp_accuracy,
+                             metric_name="accuracy").build().run()
+    dt_hier = time.time() - t0
+    uploads_hier = np.asarray(res_hier.cloud_uploads, np.float64)
+    lan_uploads = int(res_hier.selected_history.sum())
+
+    target = target_frac * res_flat.final_acc
+    rows = {
+        "flat": dict(final=res_flat.final_acc, peak=res_flat.peak_acc,
+                     wan_total=float(uploads_flat.sum()),
+                     wan_to_target=comm_to_target(res_flat.accuracy,
+                                                  uploads_flat, target),
+                     wall_sec=dt_flat),
+        "hierarchical": dict(final=res_hier.final_acc, peak=res_hier.peak_acc,
+                             wan_total=float(uploads_hier.sum()),
+                             wan_to_target=comm_to_target(res_hier.accuracy,
+                                                          uploads_hier, target),
+                             lan_uploads=lan_uploads,
+                             wall_sec=dt_hier),
+    }
+    for name, row in rows.items():
+        emit(f"{name}_K{clients}", row["wall_sec"] / rounds * 1e6,
+             {"rounds": rounds, **{k: float(v) for k, v in row.items()}})
+    improvement = (rows["flat"]["wan_to_target"]
+                   / rows["hierarchical"]["wan_to_target"])
+    print(f"# target acc {target:.4f} ({target_frac:.0%} of flat final)  "
+          f"WAN-communication-to-target improvement: {improvement:.2f}x "
+          f"(E={edges} edge aggregates/round vs m={fed.num_selected} "
+          "client uploads/round)")
+    return {
+        "config": dict(clients=clients, edges=edges, rounds=rounds,
+                       participation=participation, steps=steps, batch=batch,
+                       target=target, smoke=smoke),
+        "flat": {**rows["flat"], "accuracy": res_flat.accuracy,
+                 "wan_uploads": uploads_flat},
+        "hierarchical": {**rows["hierarchical"], "accuracy": res_hier.accuracy,
+                         "wan_uploads": uploads_hier},
+        "wan_improvement_to_target": improvement,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-K CI guard: fails loudly, finishes in ~2 min")
+    ap.add_argument("--clients", type=int, default=0, help="0 = preset")
+    ap.add_argument("--edges", type=int, default=0, help="0 = preset")
+    ap.add_argument("--rounds", type=int, default=0, help="0 = preset")
+    ap.add_argument("--participation", type=float, default=0.5)
+    ap.add_argument("--target-frac", type=float, default=0.8)
+    args = ap.parse_args()
+
+    clients = args.clients or (24 if args.smoke else 1024)
+    edges = args.edges or (4 if args.smoke else 32)
+    rounds = args.rounds or (10 if args.smoke else 40)
+    payload = run_table(clients=clients, edges=edges, rounds=rounds,
+                        participation=args.participation,
+                        steps=2,  # same local depth both scales — the bench
+                                  # varies topology, not client compute
+                        batch=8 if args.smoke else 16,
+                        target_frac=args.target_frac, smoke=args.smoke)
+    emit_bench_json("hierarchy", payload)
+
+    if not math.isfinite(payload["wan_improvement_to_target"]):
+        raise SystemExit(
+            "REGRESSION: hierarchical never reached the target accuracy")
+    if payload["wan_improvement_to_target"] <= 1.0:
+        raise SystemExit(
+            f"REGRESSION: hierarchical WAN-to-target improvement is "
+            f"{payload['wan_improvement_to_target']:.2f}x (expected > 1x — "
+            f"E={edges} edge aggregates should beat m client uploads)")
+
+
+if __name__ == "__main__":
+    main()

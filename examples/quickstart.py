@@ -44,11 +44,21 @@ def main():
                     help="async over-selection fraction ε")
     ap.add_argument("--straggler-factor", type=float, default=1.0,
                     help="every 5th client is this many times slower")
+    ap.add_argument("--topology", default="flat",
+                    choices=["flat", "hierarchical"],
+                    help="two-tier client→edge→cloud rounds (docs/hierarchy.md)")
+    ap.add_argument("--edges", type=int, default=0,
+                    help="hierarchical: number of edge groups E (default 4)")
     args = ap.parse_args()
 
+    if args.edges and args.topology != "hierarchical":
+        ap.error("--edges only takes effect with --topology hierarchical "
+                 "(flat rounds have no edge tier)")
+    edge_count = (args.edges or 4) if args.topology == "hierarchical" else 0
     fed = FedConfig(num_clients=12, participation=0.5, rounds=args.rounds,
                     local_epochs=2, local_batch=16, lr=0.3, mu=0.1,
-                    dirichlet_alpha=0.1, seed=0)
+                    dirichlet_alpha=0.1, seed=0, topology=args.topology,
+                    edge_count=edge_count)
     data = make_vision_data(fed, train_per_class=48, test_per_class=16, noise=0.3)
     model = build_model(dataclasses.replace(
         smoke_variant(get_config("resnet18-cifar10")), d_model=8))
@@ -67,7 +77,9 @@ def main():
             over_select_frac=args.over_select)
 
     print(f"selector={args.selector}  clients={fed.num_clients}  "
-          f"m={fed.num_selected}/round  mu={fed.mu}  policy={args.round_policy}")
+          f"m={fed.num_selected}/round  mu={fed.mu}  policy={args.round_policy}"
+          + (f"  topology=hierarchical E={fed.edge_count}"
+             if fed.topology == "hierarchical" else ""))
     spec = FederatedSpec(model, fed, data, selector=args.selector,
                          steps_per_round=4, executor=args.executor,
                          aggregator=args.aggregator, verbose=True,
@@ -81,6 +93,10 @@ def main():
     if res.wall_clock is not None and len(res.wall_clock):
         print(f"  simulated wall-clock: {res.wall_clock[-1]:.2f} units, "
               f"mean update staleness {float(res.round_staleness.mean()):.2f}")
+    if res.cloud_uploads is not None:
+        print(f"  edge→cloud uploads: {int(res.cloud_uploads.sum())} "
+              f"aggregates (flat would ship "
+              f"{fed.num_selected * fed.rounds} client updates)")
 
 
 if __name__ == "__main__":

@@ -146,7 +146,7 @@ class FedConfig:
     selector: str = "heterosel"
     dirichlet_alpha: float = 0.1
     seed: int = 0
-    # Client-execution engine (docs/architecture.md §2):
+    # Client-execution engine (docs/engine.md §3):
     #   'batched'    — all selected clients in one vmapped jitted call
     #                  (default; the only path that scales past ~10² clients)
     #   'sequential' — one jitted call per client; the numerical reference.
@@ -154,7 +154,7 @@ class FedConfig:
     # With 'batched': >0 caps the per-call cohort at this many clients
     # (fixed-shape chunks, one compile; bounds memory when m is large).
     client_chunk: int = 0
-    # Round management (docs/architecture.md §2b):
+    # Round management (docs/async.md):
     #   'sync'  — every round blocks on the slowest selected client (the
     #             paper's Algorithm 1; default).
     #   'async' — event-driven rounds on a virtual wall clock: deadline-
@@ -162,6 +162,21 @@ class FedConfig:
     #             aggregation (fed/async_engine.py). Deadline/ε/staleness
     #             knobs live in fed.async_engine.AsyncConfig (spec field).
     round_policy: str = "sync"
+    # Federation topology (docs/hierarchy.md):
+    #   'flat'         — every selected client uploads straight to the cloud
+    #                    (the paper's setting; default).
+    #   'hierarchical' — clients are partitioned into ``edge_count`` edge
+    #                    groups; HeteRo-Select runs twice per round (inner
+    #                    per-edge selection with budget m_e, outer cross-edge
+    #                    selection over pooled edge scores) and aggregation is
+    #                    two-stage: per-edge FedAvg, then a weighted cross-
+    #                    edge combine at the cloud (fed/hierarchy.py).
+    topology: str = "flat"
+    # E — number of edge groups; required (> 0) when topology='hierarchical'.
+    edge_count: int = 0
+    # Per-edge inner selection budget m_e. 0 ⇒ distribute ``num_selected``
+    # across edges proportionally to edge size (budgets then sum to ≤ m).
+    edge_budget: int = 0
 
     @property
     def num_selected(self) -> int:

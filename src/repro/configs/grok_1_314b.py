@@ -7,7 +7,7 @@ CONFIG = ModelConfig(
     num_heads=48, num_kv_heads=8, d_ff=32768, vocab_size=131072,
     num_experts=8, num_experts_per_tok=2,
     # a2a EP needs experts % |data|=16 == 0; with 8 experts the gather impl
-    # (f-sliced experts on every chip) is the right layout — see DESIGN.md.
+    # (f-sliced experts on every chip) is the right layout — see docs/kernels.md §2.
     moe_impl="gather",
     citation="hf:xai-org/grok-1",
 )

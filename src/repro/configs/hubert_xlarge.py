@@ -2,7 +2,7 @@
 
 Conv/mel frontend is a STUB per the brief: input_specs() supplies frame
 embeddings. Training objective: masked prediction over vocab=504 cluster
-targets. Encoder-only ⇒ decode shapes are skipped (DESIGN.md §4).
+targets. Encoder-only ⇒ decode shapes are skipped (launch/steps.py).
 """
 
 from repro.configs.base import ModelConfig

@@ -1,6 +1,6 @@
 """ResNet-18 on CIFAR-10 — the paper's own experimental setup (Sec IV).
 
-GroupNorm replaces BatchNorm (standard non-IID FL practice; DESIGN.md §2).
+GroupNorm replaces BatchNorm (standard non-IID FL practice — rationale in models/resnet.py).
 """
 
 from repro.configs.base import ModelConfig

@@ -5,6 +5,12 @@ All components are computed as vectorized ``(K,)`` arrays from
 the champion configuration; the multiplicative variant (Eq 2) is kept for
 the Table-III ablation.
 
+Nothing here assumes the rows are *clients*: the hierarchical topology
+(``fed.hierarchy``) feeds the same functions an (E,)-sized state whose rows
+pool each edge group's metadata (``core.state.pool_client_state``), so edge
+aggregates are scored by their pooled information-value / diversity /
+fairness components with zero new scoring code.
+
 Component ranges (paper):
   V'  ∈ [0, 1]    normalized information value (Eq 3)
   D   ∈ [0, 2·JS] diversity, decaying weight (Eq 4); JS ∈ [0, log 2]

@@ -210,6 +210,29 @@ def oort_select(
     return mask, probs
 
 
+def edge_selection_probs(
+    pooled_state: ClientState,
+    round_idx: jax.Array,
+    sel_cfg: SelectorConfig,
+    score_cfg: HeteRoScoreConfig,
+) -> jax.Array:
+    """(E,) cross-edge selection probabilities for the hierarchical outer
+    stage (docs/hierarchy.md).
+
+    ``pooled_state`` is the (E,)-sized pseudo-client state produced by
+    ``core.state.pool_client_state`` — each row pools one edge group's
+    metadata — so the paper's score machinery (Eqs 1–11 + the Eq-12 softmax
+    with dynamic temperature) runs on edge aggregates unchanged. Sampling
+    itself stays with the caller (the hierarchical engine masks busy edges
+    host-side before its Gumbel-top-m draw, which a pure jitted function
+    cannot express with a round-varying edge count).
+    """
+    scores = compute_scores(pooled_state, round_idx, score_cfg,
+                            additive=sel_cfg.additive)
+    tau = dynamic_temperature(round_idx, sel_cfg)
+    return selection_probabilities(scores, tau)
+
+
 def make_selector(
     name: str,
     sel_cfg: SelectorConfig,

@@ -130,6 +130,49 @@ def scatter_observations(
     return loss, sq
 
 
+def pool_client_state(state: ClientState, assignment: jax.Array,
+                      num_edges: int) -> ClientState:
+    """(E,)-pooled ``ClientState`` for hierarchical cross-edge scoring.
+
+    Each edge becomes one pseudo-client whose metadata pools its members'
+    rows, so ``core.scoring.compute_score_components`` runs unchanged on the
+    result (the hierarchical engine's outer selection — docs/hierarchy.md):
+
+      * ``loss_prev`` / ``loss_prev2`` / ``update_sqnorm`` — mean over the
+        edge's *observed* members (``has_loss`` / ``has_momentum``-weighted,
+        so never-contacted clients do not dilute the utility signal);
+      * ``label_js`` — plain mean (the edge's pooled diversity);
+      * ``part_count`` — mean participation (a sum would bias large edges);
+      * ``last_selected`` — max (the edge's most recent cloud contact);
+      * ``has_loss`` / ``has_momentum`` — max (any member observed).
+
+    ``assignment`` is the (K,) edge id of each client
+    (``fed.partition.EdgePartition.assignment``). All pooling is one
+    ``segment_sum``/``segment_max`` pass — O(K), no per-edge gathers.
+    """
+    seg = jnp.asarray(assignment, jnp.int32)
+
+    def ssum(x: jax.Array) -> jax.Array:
+        return jax.ops.segment_sum(x.astype(jnp.float32), seg, num_edges)
+
+    def smax(x: jax.Array) -> jax.Array:
+        return jax.ops.segment_max(x, seg, num_edges)
+
+    counts = jnp.maximum(ssum(jnp.ones_like(state.has_loss)), 1.0)
+    n_obs = jnp.maximum(ssum(state.has_loss), 1.0)
+    n_mom = jnp.maximum(ssum(state.has_momentum), 1.0)
+    return ClientState(
+        loss_prev=ssum(state.loss_prev * state.has_loss) / n_obs,
+        loss_prev2=ssum(state.loss_prev2 * state.has_momentum) / n_mom,
+        label_js=ssum(state.label_js) / counts,
+        part_count=ssum(state.part_count) / counts,
+        last_selected=smax(state.last_selected),
+        update_sqnorm=ssum(state.update_sqnorm * state.has_loss) / n_obs,
+        has_loss=smax(state.has_loss),
+        has_momentum=smax(state.has_momentum),
+    )
+
+
 def score_inputs(state: ClientState) -> tuple[jax.Array, ...]:
     """The eight (K,) metadata vectors, in the argument order of the fused
     Pallas scoring kernel ``kernels.score_select.fused_score_probs``.

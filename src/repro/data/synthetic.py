@@ -1,7 +1,7 @@
 """Synthetic federated datasets + dry-run input specs.
 
 No-internet substitute for CIFAR-10/Fashion-MNIST/MNIST
-(docs/architecture.md §7): a class-conditional image generator whose
+(docs/engine.md §6): a class-conditional image generator whose
 difficulty is controlled by the template/noise ratio. Label-skew
 heterogeneity, client drift and selection dynamics — the phenomena the paper
 studies — are all driven by the Dirichlet partition, which we reproduce
@@ -13,7 +13,7 @@ Two materialization strategies:
   * ``make_lazy_vision_data`` — the cross-device-scale path (K up to 10⁴–10⁵):
     only the (K, C) Dirichlet label distributions persist; each round's
     cohort batches are synthesized on the fly, stacked along a leading
-    client axis for the batched execution engine (docs/architecture.md §3).
+    client axis for the batched execution engine (docs/engine.md §4).
 
 Also provides the LM/audio/VLM federated stand-ins for the big architectures
 and the ``input_specs`` ShapeDtypeStruct providers used by launch/dryrun.py.
@@ -288,7 +288,7 @@ def make_lm_data(fed: FedConfig, vocab: int, seq_len: int = 64) -> LMFedData:
 
 
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
-    """Abstract model inputs for (arch × input-shape), per docs/architecture.md §7.
+    """Abstract model inputs for (arch × input-shape), per docs/engine.md §6.
 
     train/prefill: the full (global_batch, seq_len) batch.
     decode: one new token per sequence (the KV/state cache is built

@@ -15,6 +15,11 @@ from repro.fed.batched import (
     train_clients_batched,
 )
 from repro.fed.clock import Completion, LatencyModel, VirtualClock
+from repro.fed.hierarchy import (
+    HierarchicalEngine,
+    HierarchyConfig,
+    edge_budgets,
+)
 from repro.fed.engine import (
     AGGREGATORS,
     EXECUTORS,
@@ -79,6 +84,10 @@ __all__ = [
     "VirtualClock",
     "LatencyModel",
     "Completion",
+    # hierarchical (client → edge → cloud) federation
+    "HierarchicalEngine",
+    "HierarchyConfig",
+    "edge_budgets",
     # legacy wrapper + batched primitives
     "run_federated",
     "make_batched_local_train",

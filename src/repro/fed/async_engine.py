@@ -127,6 +127,74 @@ def staleness_weights(staleness: np.ndarray, power: float) -> np.ndarray:
     return (1.0 + tau) ** (-float(power))
 
 
+def drain_due_arrivals(clock: "VirtualClock", acfg: "AsyncConfig", t: int,
+                       dispatch_time: float,
+                       in_flight: np.ndarray) -> tuple:
+    """Close one round on the clock and collect its aggregatable arrivals.
+
+    The deadline-close semantics shared by the flat async engine (arrivals
+    are client updates) and the hierarchical one (arrivals are edge
+    aggregates — ``fed.hierarchy``; ``in_flight`` is indexed by whatever
+    ``Completion.client`` holds):
+
+      * the round closes at ``dispatch_time + acfg.deadline``; with an
+        infinite deadline it waits for everything currently in flight;
+      * every popped arrival frees its in-flight slot, then the staleness
+        filter applies: arrivals older than ``acfg.max_staleness`` model
+        versions are dropped (counted, never silent);
+      * ``min_updates`` counts *aggregatable* arrivals — events the
+        staleness filter discarded must not satisfy the never-an-empty-round
+        promise — so the close extends completion-by-completion until
+        enough arrive or nothing is pending.
+
+    Returns ``(kept, dropped)``: the arrivals to aggregate, in (time, seq)
+    order, and how many the staleness filter discarded.
+    """
+    if math.isinf(acfg.deadline):
+        close = clock.latest_time()
+        close = dispatch_time if close is None else close
+    else:
+        close = dispatch_time + acfg.deadline
+    kept: List[Completion] = []
+    dropped = 0
+
+    def ingest(events: List[Completion]) -> None:
+        nonlocal dropped
+        for ev in events:
+            in_flight[ev.client] = False
+            if (acfg.max_staleness is not None
+                    and t - ev.dispatch_round > acfg.max_staleness):
+                dropped += 1
+            else:
+                kept.append(ev)
+
+    ingest(clock.pop_due(close))
+    while len(kept) < acfg.min_updates and len(clock):
+        ingest(clock.pop_due(clock.peek_time()))
+    return kept, dropped
+
+
+def upgrade_async_aggregator(agg: Aggregator, acfg: "AsyncConfig") -> Aggregator:
+    """The async-mode aggregator contract, shared with ``fed.hierarchy``.
+
+    The config-default ``FedAvg`` silently becomes a ``BufferedAggregator``
+    (async's FedAvg *is* fedbuff — every update has τ = 0 under equal
+    latencies); anything else must declare ``supports_deltas`` because
+    async arrivals are deltas against different global versions and cannot
+    be plainly averaged.
+    """
+    if type(agg) is FedAvg:
+        return BufferedAggregator(staleness_power=acfg.staleness_power,
+                                  server_lr=acfg.server_lr)
+    if not getattr(agg, "supports_deltas", False):
+        raise ValueError(
+            f"aggregator {getattr(agg, 'name', agg)!r} cannot aggregate "
+            "async delta cohorts (updates arrive as deltas against "
+            "different global versions); use 'fedbuff' or an Aggregator "
+            "with supports_deltas=True")
+    return agg
+
+
 @dataclasses.dataclass
 class PendingUpdate:
     """What a completion event carries back to the server."""
@@ -170,10 +238,7 @@ class BufferedAggregator(Aggregator):
                 global_params, cohort.delta_list, jnp.asarray(w, jnp.float32),
                 server_lr=self.server_lr)
         # Sync-engine cohort: same-anchor params — one zero-staleness delta.
-        avg = self._mean(cohort)
-        delta = jax.tree_util.tree_map(
-            lambda a, g: a.astype(jnp.float32) - g.astype(jnp.float32),
-            avg, global_params)
+        delta = fed_server.params_delta_f32(self._mean(cohort), global_params)
         return fed_server.apply_weighted_deltas(
             global_params, [delta], jnp.ones((1,), jnp.float32),
             server_lr=self.server_lr)
@@ -255,17 +320,7 @@ class AsyncFederatedEngine(FederatedEngine):
                 inner.keep_client_params = True
 
     def _upgrade_aggregator(self) -> None:
-        if type(self.aggregator) is FedAvg:
-            # The config-default aggregator: async's FedAvg *is* fedbuff.
-            self.aggregator = BufferedAggregator(
-                staleness_power=self.acfg.staleness_power,
-                server_lr=self.acfg.server_lr)
-        elif not getattr(self.aggregator, "supports_deltas", False):
-            raise ValueError(
-                f"aggregator {getattr(self.aggregator, 'name', self.aggregator)!r} "
-                "cannot aggregate async delta cohorts (updates arrive as "
-                "deltas against different global versions); use 'fedbuff' or "
-                "an Aggregator with supports_deltas=True")
+        self.aggregator = upgrade_async_aggregator(self.aggregator, self.acfg)
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -331,27 +386,9 @@ class AsyncFederatedEngine(FederatedEngine):
             self._in_flight[selected] = True
 
         # 3. Close the round at the deadline; carry late updates forward.
-        if math.isinf(acfg.deadline):
-            close = self.clock.latest_time()
-            close = dispatch_time if close is None else close
-        else:
-            close = dispatch_time + acfg.deadline
-        kept: List[Completion] = []
-
-        def ingest(events: List[Completion]) -> None:
-            for ev in events:
-                self._in_flight[ev.client] = False
-                if (acfg.max_staleness is not None
-                        and t - ev.dispatch_round > acfg.max_staleness):
-                    self.updates_dropped += 1
-                else:
-                    kept.append(ev)
-
-        ingest(self.clock.pop_due(close))
-        # min_updates counts *aggregatable* updates: arrivals the staleness
-        # filter discarded must not satisfy the never-an-empty-round promise.
-        while len(kept) < acfg.min_updates and len(self.clock):
-            ingest(self.clock.pop_due(self.clock.peek_time()))
+        kept, dropped = drain_due_arrivals(self.clock, acfg, t, dispatch_time,
+                                           self._in_flight)
+        self.updates_dropped += dropped
 
         # 4. Buffered aggregation + metadata fold for the arrivals.
         stale = np.asarray([t - ev.dispatch_round for ev in kept], np.float32)
@@ -418,9 +455,7 @@ class AsyncFederatedEngine(FederatedEngine):
             raise ExecutorCompatError(
                 "async rounds need per-client updates, but the executor "
                 "returned only the fused cohort mean")
-        return jax.tree_util.tree_map(
-            lambda a, g: a.astype(jnp.float32) - g.astype(jnp.float32),
-            w_i, self.params)
+        return fed_server.params_delta_f32(w_i, self.params)
 
     def _result(self, extras) -> FLResult:
         extras.setdefault("wall_clock", np.asarray(self.wall_clock))

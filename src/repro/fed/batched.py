@@ -3,7 +3,7 @@
 The sequential reference path (``FedConfig.client_execution="sequential"``)
 dispatches one jitted ``local_train`` per selected client — fine for the
 paper's 12-client federation, but at cross-device scale (10³–10⁶ clients,
-see docs/architecture.md §3) per-client Python dispatch dominates wall-clock
+see docs/engine.md §4) per-client Python dispatch dominates wall-clock
 and the accelerator idles between visits.
 
 This module stacks the selected clients into struct-of-arrays batches

@@ -6,7 +6,7 @@ The local update is plain SGD on that objective (Algorithm 1 line 21):
     w ← w − α_lr (∇L_k(w) + μ(w − w_global))
 — deliberately optimizer-state-free, which is what makes FedProx-style FL of
 very large models HBM-feasible, and what lets the batched execution engine
-(fed.batched, docs/architecture.md §2) vmap a whole cohort of these visits
+(fed.batched, docs/engine.md §3) vmap a whole cohort of these visits
 into one call without stacking per-client optimizer state. ``local_train``
 scans over a pre-batched epoch stack so the whole client visit is one
 jitted call.

@@ -107,6 +107,11 @@ class FLResult:
     # runs, where every round costs "1" and staleness is always 0.
     wall_clock: Optional[np.ndarray] = None
     round_staleness: Optional[np.ndarray] = None
+    # Hierarchical-mode extra (fed.hierarchy): edge aggregates uploaded to
+    # the cloud per round — the WAN communication axis benchmarks/
+    # table7_hierarchy.py compares against flat selection. None for flat
+    # runs, where every selected client uploads straight to the cloud.
+    cloud_uploads: Optional[np.ndarray] = None
 
     @property
     def peak_acc(self) -> float:
@@ -799,6 +804,14 @@ class FederatedSpec:
     round_policy: Optional[str] = None
     async_cfg: Optional[Any] = None      # fed.async_engine.AsyncConfig
     system: Optional[Any] = None         # SystemProfile | (K,) multipliers
+    # Federation topology: None defers to fed.topology ('flat' |
+    # 'hierarchical'). 'hierarchical' builds a HierarchicalEngine
+    # (fed.hierarchy): clients partitioned into FedConfig.edge_count edge
+    # groups, HeteRo-Select twice per round (per-edge budgets + cross-edge
+    # pooled scores), two-stage aggregation; composes with either round
+    # policy. ``hier_cfg`` holds the partition/outer-budget knobs.
+    topology: Optional[str] = None
+    hier_cfg: Optional[Any] = None       # fed.hierarchy.HierarchyConfig
 
     @property
     def resolved_steps(self) -> int:
@@ -812,15 +825,41 @@ class FederatedSpec:
     def resolved_round_policy(self) -> str:
         return self.round_policy or getattr(self.fed, "round_policy", "sync")
 
+    @property
+    def resolved_topology(self) -> str:
+        return self.topology or getattr(self.fed, "topology", "flat")
+
     def build(self) -> "FederatedEngine":
         policy = self.resolved_round_policy
+        if policy not in ("sync", "async"):
+            raise ValueError(
+                f"round_policy must be 'sync' or 'async', got {policy!r}")
+        topo = self.resolved_topology
+        if topo == "hierarchical":
+            # The hierarchical engine owns both round policies itself (the
+            # unit of cloud arrival is an edge aggregate, not a client
+            # update, so flat-async cannot be stacked underneath).
+            from repro.fed.hierarchy import HierarchicalEngine
+
+            return HierarchicalEngine(self)
+        if topo != "flat":
+            raise ValueError(
+                f"topology must be 'flat' or 'hierarchical', got {topo!r}")
+        if self.hier_cfg is not None:
+            raise ValueError(
+                "hier_cfg is only consumed by topology='hierarchical'; "
+                "the flat engines have no edge tier to apply it to")
+        if getattr(self.fed, "edge_count", 0) or getattr(self.fed, "edge_budget", 0):
+            # Setting edge sizing but forgetting topology='hierarchical'
+            # would otherwise run a flat federation that *looks* two-tier.
+            raise ValueError(
+                "FedConfig.edge_count/edge_budget are only consumed by "
+                "topology='hierarchical'; set FedConfig.topology (or the "
+                "spec's topology field) or drop the edge fields")
         if policy == "async":
             from repro.fed.async_engine import AsyncFederatedEngine
 
             return AsyncFederatedEngine(self)
-        if policy != "sync":
-            raise ValueError(
-                f"round_policy must be 'sync' or 'async', got {policy!r}")
         if self.async_cfg is not None or self.system is not None:
             # The sync engine has no clock: silently modeling a homogeneous
             # instant fleet while the config says otherwise is how wrong
@@ -1041,6 +1080,7 @@ class FederatedEngine:
             metric_name=self.metric_name,
             wall_clock=extras.get("wall_clock"),
             round_staleness=extras.get("round_staleness"),
+            cloud_uploads=extras.get("cloud_uploads"),
         )
 
     # -- checkpoint / resume ----------------------------------------------

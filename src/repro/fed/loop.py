@@ -55,6 +55,8 @@ def run_federated(
     round_policy: Optional[str] = None,      # None ⇒ fed.round_policy
     async_cfg: Optional[Any] = None,         # fed.async_engine.AsyncConfig
     system: Optional[Any] = None,            # SystemProfile | (K,) multipliers
+    topology: Optional[str] = None,          # None ⇒ fed.topology
+    hier_cfg: Optional[Any] = None,          # fed.hierarchy.HierarchyConfig
 ) -> FLResult:
     """Run ``fed.rounds`` federated rounds and collect paper metrics.
 
@@ -73,7 +75,13 @@ def run_federated(
     asynchronous rounds on a virtual wall clock — deadline-closed,
     over-selected, staleness-weighted buffered aggregation — with
     per-client latencies from ``system`` and knobs in ``async_cfg``
-    (``fed.async_engine.AsyncConfig``; docs/architecture.md §2b).
+    (``fed.async_engine.AsyncConfig``; docs/async.md).
+
+    ``topology='hierarchical'`` (or ``fed.topology``) runs two-tier rounds:
+    clients partitioned into ``fed.edge_count`` edge groups, HeteRo-Select
+    twice per round (inner per-edge budgets + outer cross-edge pooled
+    scores), two-stage aggregation; partition/outer knobs in ``hier_cfg``
+    (``fed.hierarchy.HierarchyConfig``; docs/hierarchy.md).
     """
     hooks = ["adaptive_mu"] if adaptive_mu else []
     spec = FederatedSpec(
@@ -97,5 +105,7 @@ def run_federated(
         round_policy=round_policy,
         async_cfg=async_cfg,
         system=system,
+        topology=topology,
+        hier_cfg=hier_cfg,
     )
     return spec.build().run()

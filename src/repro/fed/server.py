@@ -54,7 +54,7 @@ def fedavg_fused(stacked_params: Any, weights: Optional[jax.Array] = None) -> An
     ``weights=None`` → the paper's unweighted mean (Algorithm 1 line 26);
     otherwise weights are normalized to sum to 1. Output leaves keep the
     input dtype. This is the batched engine's aggregation step — see
-    docs/architecture.md §2.
+    docs/engine.md §3.
     """
     m = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
     if weights is None:
@@ -68,6 +68,19 @@ def fedavg_fused(stacked_params: Any, weights: Optional[jax.Array] = None) -> An
     )
 
 
+def params_delta_f32(new_params: Any, anchor: Any) -> Any:
+    """Δ = new − anchor, accumulated in f32 regardless of param dtype.
+
+    The one delta convention shared by everything that ships updates as
+    anchor-relative deltas — the async engine's per-client deltas, the
+    hierarchical engine's per-edge deltas, and ``BufferedAggregator``'s
+    sync fallback. ``apply_weighted_deltas`` below is the inverse step.
+    """
+    return jax.tree_util.tree_map(
+        lambda a, g: a.astype(jnp.float32) - g.astype(jnp.float32),
+        new_params, anchor)
+
+
 def apply_weighted_deltas(global_params: Any, deltas: Sequence[Any],
                           weights: jax.Array, server_lr: float = 1.0) -> Any:
     """w ← w + η_s · Σ_i w̄_i Δ_i — the buffered-async server step.
@@ -79,6 +92,11 @@ def apply_weighted_deltas(global_params: Any, deltas: Sequence[Any],
     as polynomial staleness discounts. Accumulation runs in f32, output
     leaves keep the param dtype. With uniform weights, zero staleness and
     η_s = 1 this reduces to FedAvg up to float reassociation.
+
+    This is also the hierarchical cloud stage (``fed.hierarchy``): there the
+    deltas are per-*edge* aggregates relative to the dispatch anchor,
+    weighted by edge cohort size (× the FedBuff staleness discount when a
+    straggler edge arrives late in async mode).
     """
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.maximum(jnp.sum(w), 1e-30)

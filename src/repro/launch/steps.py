@@ -11,7 +11,7 @@ step function + abstract inputs + explicit shardings:
   * decode_*  → ``serve_step``: one token against a KV/state cache
                 (cache donated).
 
-Encoder-only archs have no decode (DESIGN.md §4); dense/VLM/MoE archs run
+Encoder-only archs have no decode (no decode shapes are assigned); dense/VLM/MoE archs run
 long_500k with the sliding-window variant (window 8192).
 """
 
@@ -194,7 +194,7 @@ def build_plan(
 
             new_params, losses = jax.vmap(local)(stacked_params, sb)
             # FedAvg across the client (pod) axis — the round's only
-            # cross-pod collective (DESIGN.md §2).
+            # cross-pod collective (docs/kernels.md §2).
             global_params = jax.tree_util.tree_map(
                 lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype),
                 new_params,

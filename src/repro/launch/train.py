@@ -28,7 +28,8 @@ import jax
 from repro.configs.base import FedConfig
 from repro.configs.registry import get_config, smoke_variant
 from repro.data import make_lm_data, make_vision_data
-from repro.fed import AsyncConfig, CheckpointHook, FederatedSpec
+from repro.fed import (AsyncConfig, CheckpointHook, FederatedSpec,
+                       HierarchyConfig)
 from repro.fed.availability import SystemProfile
 from repro.models import build_model
 from repro.ckpt import save_checkpoint
@@ -60,6 +61,18 @@ def main() -> None:
     ap.add_argument("--system-sigma", type=float, default=0.0,
                     help="log-normal sigma of per-client round-time "
                          "multipliers (0 = homogeneous fleet)")
+    ap.add_argument("--topology", default="flat",
+                    choices=["flat", "hierarchical"],
+                    help="flat client→cloud vs two-tier client→edge→cloud "
+                         "rounds (fed/hierarchy.py)")
+    ap.add_argument("--edges", type=int, default=0,
+                    help="hierarchical: number of edge groups E (required)")
+    ap.add_argument("--edge-budget", type=int, default=0,
+                    help="hierarchical: per-edge inner budget m_e "
+                         "(0 = distribute m across edges by size)")
+    ap.add_argument("--edges-per-round", type=int, default=0,
+                    help="hierarchical: outer cross-edge budget "
+                         "(0 = all edges every round)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -67,9 +80,18 @@ def main() -> None:
         cfg = smoke_variant(cfg)
         print(f"[train] single-device/smoke mode: {cfg.name}")
 
+    if args.topology == "hierarchical" and args.edges < 1:
+        ap.error("--topology hierarchical requires --edges E (≥ 1)")
+    if args.topology != "hierarchical" and (
+            args.edges or args.edge_budget or args.edges_per_round):
+        ap.error("--edges/--edge-budget/--edges-per-round only take effect "
+                 "with --topology hierarchical (flat rounds have no edge "
+                 "tier)")
     fed = FedConfig(num_clients=args.clients, participation=args.participation,
                     rounds=args.rounds, local_epochs=2, local_batch=16,
-                    lr=args.lr, mu=args.mu, selector=args.selector, seed=0)
+                    lr=args.lr, mu=args.mu, selector=args.selector, seed=0,
+                    topology=args.topology, edge_count=args.edges,
+                    edge_budget=args.edge_budget)
     if cfg.family == "resnet":
         data = make_vision_data(fed, train_per_class=48, test_per_class=16, noise=0.3)
     else:
@@ -81,6 +103,10 @@ def main() -> None:
         if args.round_policy == "async":
             ap.error("--ckpt-dir is not supported with --round-policy async "
                      "(clock + in-flight buffer are not checkpointed yet)")
+        if args.topology == "hierarchical":
+            ap.error("--ckpt-dir is not supported with --topology "
+                     "hierarchical (per-round edge state is not "
+                     "checkpointed yet)")
         hooks.append(CheckpointHook(args.ckpt_dir, every=args.ckpt_every,
                                     resume=True))
     if args.system_sigma > 0 and args.round_policy != "async":
@@ -93,15 +119,23 @@ def main() -> None:
         async_cfg = AsyncConfig(
             deadline=args.deadline if args.deadline > 0 else math.inf,
             over_select_frac=args.over_select)
+    hier_cfg = (HierarchyConfig(edges_per_round=args.edges_per_round)
+                if args.topology == "hierarchical" else None)
     spec = FederatedSpec(model, fed, data, steps_per_round=4,
                          aggregator=args.aggregator, hooks=hooks, verbose=True,
                          round_policy=args.round_policy, async_cfg=async_cfg,
-                         system=system)
+                         system=system, hier_cfg=hier_cfg)
     res = spec.build().run()
     print(f"\nfinal metrics ({res.metric_name}):", res.labeled_summary())
     if res.wall_clock is not None and len(res.wall_clock):
         print(f"simulated wall-clock: {res.wall_clock[-1]:.2f} units "
               f"(mean staleness {float(res.round_staleness.mean()):.2f})")
+    if res.cloud_uploads is not None:
+        # Flat counterfactual: m client uploads every round, regardless of
+        # how many edges were active or in flight here.
+        print(f"edge→cloud uploads: {int(res.cloud_uploads.sum())} aggregates "
+              f"over {fed.rounds} rounds (flat selection would ship "
+              f"{fed.num_selected * fed.rounds} client updates)")
     if args.ckpt_dir:
         path = save_checkpoint(args.ckpt_dir, res.params, step=fed.rounds,
                                extra=res.summary())

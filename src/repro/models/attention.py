@@ -7,7 +7,7 @@ it keeps HLO memory-traffic realistic for the roofline (no materialized
 S×T score matrices at 32k context).
 
 Sharding notes: all einsums keep a single flat head axis so the model axis
-shards heads cleanly when divisible (DESIGN.md §2); KV heads with
+shards heads cleanly when divisible (docs/kernels.md §2); KV heads with
 ``num_kv_heads < axis size`` stay replicated and are broadcast per chunk.
 """
 

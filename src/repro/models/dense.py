@@ -2,7 +2,7 @@
 
 Pre-norm GQA transformer with SwiGLU MLP, RoPE, optional QKV bias and
 sliding-window attention (the long-context variant used for long_500k on
-dense archs — DESIGN.md §4). Layers are stacked and run under ``lax.scan``
+dense archs — configs/shapes.py). Layers are stacked and run under ``lax.scan``
 with optional per-layer remat so 126-layer configs lower to compact HLO.
 """
 

@@ -4,7 +4,7 @@ The conv/mel frontend is a STUB per the brief: the data pipeline provides
 precomputed frame embeddings (B, S, d_model). Training objective is masked
 prediction over ``vocab_size`` (=504) cluster targets: masked frames are
 replaced by a learned mask embedding and CE is computed on masked positions.
-Attention is bidirectional (non-causal); no decode step exists (DESIGN.md §4).
+Attention is bidirectional (non-causal); no decode step exists (launch/steps.py).
 """
 
 from __future__ import annotations

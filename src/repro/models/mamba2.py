@@ -6,7 +6,7 @@ recurrence *across* chunks (lax.scan). Decode is the O(1) recurrence
 ``h ← exp(Δ·A)·h + Δ·B⊗x``, which is what makes long_500k native for
 SSM/hybrid archs (state size is independent of context length).
 
-TPU sharding adaptation (DESIGN.md §2): the reference implementation fuses
+TPU sharding adaptation (docs/kernels.md §2): the reference implementation fuses
 z/x/B/C/Δ into one ``in_proj``; we keep **separate projections** so the
 tensor-parallel 'model' axis shards the head dimension (nh) and inner width
 (d_inner = nh·headdim) on clean boundaries — the fused layout would place

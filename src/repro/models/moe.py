@@ -13,7 +13,7 @@ grouped matmuls — **dropless**, sort-based dispatch:
   * token-expert pairs are sorted by expert id and fed to ``ragged_dot``
     (TPU grouped-matmul), giving exact top-k MoE with zero capacity drops.
 
-This is the TPU-native adaptation discussed in DESIGN.md §2: expert weights
+This is the TPU-native adaptation discussed in docs/kernels.md §2: expert weights
 stay stationary; the collective pattern is (FSDP all-gather + one psum)
 instead of the GPU-style all-to-all pipeline. The all-to-all alternative is
 evaluated in the §Perf hillclimb.

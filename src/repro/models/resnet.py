@@ -1,7 +1,7 @@
 """ResNet-18 (CIFAR variant) — the paper's own experimental model (Sec IV).
 
 GroupNorm replaces BatchNorm: BN statistics are incoherent across non-IID
-federated silos (DESIGN.md §2); GN is stateless so client updates stay pure
+federated silos; GN is stateless so client updates stay pure
 parameter deltas — exactly what FedAvg/FedProx aggregation assumes.
 
 Pure-functional NHWC convnet: stem 3×3 (CIFAR), 4 stages × 2 basic blocks,

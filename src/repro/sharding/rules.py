@@ -1,6 +1,6 @@
 """Sharding rules: params / batch / cache PartitionSpecs per (arch × mesh).
 
-Policy (docs/architecture.md §4):
+Policy (docs/kernels.md §2):
   * 'model' axis — tensor parallelism: attention heads (or head_dim when the
     head count does not divide the axis, e.g. qwen2's 14 heads), d_ff, vocab,
     MoE d_ff slices, Mamba2 inner width / SSD heads.

@@ -238,7 +238,7 @@ class TestSyncAsyncEquivalence:
         np.testing.assert_allclose(res.accuracy, sync.accuracy, atol=0.011)
         assert abs(res.final_acc - sync.final_acc) <= 0.01
         # conv-family lowering amplifies the delta-form aggregation's ulp
-        # differences across SGD steps (docs/architecture.md §2a) — same
+        # differences across SGD steps (docs/engine.md §3) — same
         # ~1e-2 envelope as the batched-vs-sequential contract
         np.testing.assert_allclose(res.train_loss, sync.train_loss, atol=2e-2)
         # every round costs exactly the (uniform) latency; zero staleness

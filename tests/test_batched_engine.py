@@ -1,6 +1,6 @@
 """Batched client-execution engine tests (ISSUE 2 tentpole).
 
-Equivalence contract (docs/architecture.md §2): the batched path computes
+Equivalence contract (docs/engine.md §3): the batched path computes
 the same per-client updates as the sequential reference — exactly on
 matmul-family models, and to float tolerance on conv nets (XLA lowers the
 vmapped per-client-weights conv differently, and GN/ReLU amplify ulp-level

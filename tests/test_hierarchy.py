@@ -1,0 +1,355 @@
+"""Hierarchical two-tier federation tests (ISSUE 5 tentpole).
+
+Covers the acceptance criteria:
+  * edge-partition invariants — every client in exactly one edge, both
+    partition modes, determinism;
+  * budget invariants — per-edge budgets sum to ≤ the global m, never exceed
+    edge sizes, E=1 degenerates to the full budget;
+  * E=1 + full budget reproduces flat selection exactly (selection-identical
+    on the quickstart config, metrics bitwise);
+  * hierarchical runs under BOTH round policies ('sync' and 'async'),
+    straggler edges carrying forward as stale cloud arrivals;
+  * pooled edge state feeds the unchanged scoring machinery;
+  * bad configurations fail loudly.
+"""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.configs.base import FedConfig
+from repro.configs.registry import get_config, smoke_variant
+from repro.core.scoring import HeteRoScoreConfig, compute_scores
+from repro.core.state import init_client_state, pool_client_state
+from repro.data import make_vision_data
+from repro.fed import AsyncConfig, FederatedSpec, HierarchyConfig, edge_budgets
+from repro.fed.partition import EdgePartition, partition_edges
+from repro.models import build_model
+
+
+def tiny_model():
+    return build_model(dataclasses.replace(
+        smoke_variant(get_config("resnet18-cifar10")), d_model=8))
+
+
+@pytest.fixture(scope="module")
+def quickstart_setup():
+    """The quickstart config at 5 rounds — the E=1 equivalence pin."""
+    fed = FedConfig(num_clients=12, participation=0.5, rounds=5,
+                    local_epochs=2, local_batch=16, lr=0.3, mu=0.1,
+                    dirichlet_alpha=0.1, seed=0)
+    data = make_vision_data(fed, train_per_class=48, test_per_class=16, noise=0.3)
+    return fed, data, tiny_model()
+
+
+# ---------------------------------------------------------------------------
+# Partition invariants
+# ---------------------------------------------------------------------------
+
+
+class TestEdgePartition:
+
+    @pytest.mark.parametrize("mode", ["similarity", "random"])
+    @pytest.mark.parametrize("k,e", [(12, 1), (12, 3), (12, 5), (40, 7)])
+    def test_every_client_in_exactly_one_edge(self, mode, k, e):
+        js = np.random.default_rng(0).random(k)
+        part = partition_edges(js, e, mode=mode, seed=3)
+        assert part.assignment.shape == (k,)
+        # exactly one edge per client: ids valid and sizes sum to K
+        assert part.assignment.min() >= 0
+        assert part.assignment.max() < e
+        assert part.sizes.sum() == k
+        # member lists are a disjoint cover of [0, K)
+        all_members = np.concatenate(part.member_lists())
+        assert sorted(all_members.tolist()) == list(range(k))
+
+    def test_sizes_balanced(self):
+        part = partition_edges(np.arange(13, dtype=float), 4)
+        assert part.sizes.max() - part.sizes.min() <= 1
+
+    def test_similarity_groups_similar_skew(self):
+        js = np.array([0.9, 0.1, 0.85, 0.15, 0.8, 0.2])
+        part = partition_edges(js, 2, mode="similarity")
+        # the three low-JS clients share an edge, the three high-JS the other
+        low = part.assignment[[1, 3, 5]]
+        high = part.assignment[[0, 2, 4]]
+        assert len(set(low.tolist())) == 1
+        assert len(set(high.tolist())) == 1
+        assert low[0] != high[0]
+
+    def test_random_mode_deterministic_per_seed(self):
+        js = np.random.default_rng(1).random(30)
+        a = partition_edges(js, 5, mode="random", seed=7)
+        b = partition_edges(js, 5, mode="random", seed=7)
+        c = partition_edges(js, 5, mode="random", seed=8)
+        np.testing.assert_array_equal(a.assignment, b.assignment)
+        assert not np.array_equal(a.assignment, c.assignment)
+
+    def test_bad_configs_loud(self):
+        js = np.ones(6)
+        with pytest.raises(ValueError, match="edge_count"):
+            partition_edges(js, 0)
+        with pytest.raises(ValueError, match="edge_count"):
+            partition_edges(js, 7)
+        with pytest.raises(ValueError, match="mode"):
+            partition_edges(js, 2, mode="kmeans")
+        with pytest.raises(ValueError, match="at least one"):
+            EdgePartition(assignment=np.zeros(4, np.int32), edge_count=2)
+
+
+# ---------------------------------------------------------------------------
+# Budget invariants
+# ---------------------------------------------------------------------------
+
+
+class TestEdgeBudgets:
+
+    @pytest.mark.parametrize("m,sizes", [
+        (6, [4, 4, 4]), (6, [1, 5, 6]), (5, [3, 3]), (1, [4, 4, 4]),
+        (12, [4, 4, 4]), (512, [32] * 32),
+    ])
+    def test_sum_at_most_global_budget(self, m, sizes):
+        b = edge_budgets(m, np.asarray(sizes))
+        assert b.sum() <= m
+        assert b.sum() == min(m, sum(sizes))  # never under-spends either
+        assert np.all(b <= np.asarray(sizes))
+        assert np.all(b >= 0)
+
+    def test_e1_degenerates_to_full_budget(self):
+        assert edge_budgets(6, np.asarray([12])).tolist() == [6]
+
+    def test_proportional_to_size(self):
+        b = edge_budgets(8, np.asarray([2, 6]))
+        assert b.tolist() == [2, 6]
+
+    def test_explicit_edge_budget_caps_at_size(self):
+        b = edge_budgets(6, np.asarray([2, 8, 8]), edge_budget=4)
+        assert b.tolist() == [2, 4, 4]
+
+
+# ---------------------------------------------------------------------------
+# Pooled edge state
+# ---------------------------------------------------------------------------
+
+
+class TestPooledState:
+
+    def test_pooled_state_scoreable(self):
+        k = 10
+        state = init_client_state(k, jnp.linspace(0.0, 0.6, k))
+        assignment = jnp.asarray(np.arange(k) % 3)
+        pooled = pool_client_state(state, assignment, 3)
+        assert pooled.num_clients == 3
+        scores = compute_scores(pooled, jnp.int32(4), HeteRoScoreConfig())
+        assert scores.shape == (3,)
+        assert bool(jnp.all(jnp.isfinite(scores)))
+
+    def test_observed_weighted_means(self):
+        k = 4
+        state = init_client_state(k, jnp.zeros(k))
+        # clients 0,1 on edge 0; only client 0 observed with loss 2.0
+        state = dataclasses.replace(
+            state,
+            loss_prev=jnp.asarray([2.0, 0.0, 3.0, 5.0]),
+            has_loss=jnp.asarray([1.0, 0.0, 1.0, 1.0]),
+        )
+        pooled = pool_client_state(state, jnp.asarray([0, 0, 1, 1]), 2)
+        # edge 0 pools only its observed member; edge 1 the mean of both
+        np.testing.assert_allclose(np.asarray(pooled.loss_prev), [2.0, 4.0])
+        np.testing.assert_array_equal(np.asarray(pooled.has_loss), [1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# E=1 degenerate case == flat selection (the pinned contract)
+# ---------------------------------------------------------------------------
+
+
+class TestFlatEquivalence:
+
+    def test_e1_full_budget_matches_flat(self, quickstart_setup):
+        fed, data, model = quickstart_setup
+        flat = FederatedSpec(model, fed, data, selector="heterosel",
+                             steps_per_round=4).build().run()
+        hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=1)
+        hier = FederatedSpec(model, hfed, data, selector="heterosel",
+                             steps_per_round=4).build().run()
+        np.testing.assert_array_equal(hier.selected_history,
+                                      flat.selected_history)
+        np.testing.assert_array_equal(hier.selection_counts,
+                                      flat.selection_counts)
+        np.testing.assert_allclose(hier.accuracy, flat.accuracy, atol=0.0)
+        np.testing.assert_allclose(hier.train_loss, flat.train_loss, atol=0.0)
+        # one edge aggregate reaches the cloud per round
+        np.testing.assert_array_equal(hier.cloud_uploads,
+                                      np.ones(fed.rounds, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical rounds under both policies
+# ---------------------------------------------------------------------------
+
+
+class TestHierarchicalRounds:
+
+    def test_sync_multi_edge(self, quickstart_setup):
+        fed, data, model = quickstart_setup
+        hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=3)
+        res = FederatedSpec(model, hfed, data, selector="heterosel",
+                            steps_per_round=4).build().run()
+        assert res.accuracy.shape == (fed.rounds,)
+        # every round ships one aggregate per active edge, and the per-round
+        # cohort respects the summed edge budgets (= m here)
+        np.testing.assert_array_equal(res.cloud_uploads,
+                                      np.full(fed.rounds, 3, np.int64))
+        assert np.all(res.selected_history.sum(axis=1) == hfed.num_selected)
+        # selections respect edge budgets: within each edge, each round picks
+        # exactly that edge's budget
+        from repro.fed.hierarchy import edge_budgets as eb
+        from repro.fed.partition import partition_edges as pe
+        part = pe(np.asarray(data.label_js), 3, seed=hfed.seed)
+        budgets = eb(hfed.num_selected, part.sizes)
+        for e in range(3):
+            per_round = res.selected_history[:, part.members(e)].sum(axis=1)
+            assert np.all(per_round == budgets[e])
+
+    def test_outer_edge_selection_budget(self, quickstart_setup):
+        fed, data, model = quickstart_setup
+        hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=3)
+        res = FederatedSpec(model, hfed, data, selector="heterosel",
+                            steps_per_round=4,
+                            hier_cfg=HierarchyConfig(edges_per_round=2),
+                            ).build().run()
+        np.testing.assert_array_equal(res.cloud_uploads,
+                                      np.full(fed.rounds, 2, np.int64))
+
+    def test_async_straggler_edge_carries_forward(self, quickstart_setup):
+        fed, data, model = quickstart_setup
+        hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=3,
+                                   rounds=8)
+        # make exactly edge 0 the straggler edge (its latency is the max over
+        # its members, so the slow set must align with the partition)
+        part = partition_edges(np.asarray(data.label_js), 3, seed=hfed.seed)
+        mult = np.ones(hfed.num_clients)
+        mult[part.members(0)] = 10.0
+        res = FederatedSpec(model, hfed, data, selector="heterosel",
+                            steps_per_round=4, round_policy="async",
+                            system=mult,
+                            async_cfg=AsyncConfig(deadline=1.5),
+                            ).build().run()
+        assert res.wall_clock is not None
+        assert np.all(np.diff(res.wall_clock) > 0)  # clock moves forward
+        # a 10× straggler edge must miss the 1.5-unit deadline and arrive
+        # later as a stale cloud aggregate at least once
+        assert float(np.max(res.round_staleness)) > 0.0
+        # conservation: every dispatched edge aggregate eventually arrives
+        # or stays pending — never silently dropped
+        assert int(np.asarray(res.cloud_uploads).sum()) >= 1
+
+    def test_async_over_selection_dispatches_extra_edges(self, quickstart_setup):
+        """AsyncConfig.over_select_frac applies at the edge tier: with an
+        outer budget of 2 and ε=0.5, ⌈2·1.5⌉=3 edges dispatch per round."""
+        fed, data, model = quickstart_setup
+        hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=4,
+                                   rounds=3)
+        res = FederatedSpec(model, hfed, data, selector="heterosel",
+                            steps_per_round=1, round_policy="async",
+                            hier_cfg=HierarchyConfig(edges_per_round=2),
+                            async_cfg=AsyncConfig(deadline=math.inf,
+                                                  over_select_frac=0.5),
+                            ).build().run()
+        # equal latencies + ∞ deadline ⇒ every dispatched edge arrives in
+        # its own round, so uploads/round == dispatched edges/round == 3
+        np.testing.assert_array_equal(res.cloud_uploads,
+                                      np.full(3, 3, np.int64))
+
+    def test_async_equal_latency_inf_deadline_is_barrier(self, quickstart_setup):
+        """Homogeneous fleet + ∞ deadline: every edge arrives in its own
+        round, zero staleness — async hierarchy degenerates to sync."""
+        fed, data, model = quickstart_setup
+        hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=3)
+        res = FederatedSpec(model, hfed, data, selector="heterosel",
+                            steps_per_round=4, round_policy="async",
+                            async_cfg=AsyncConfig(deadline=math.inf),
+                            ).build().run()
+        np.testing.assert_array_equal(res.round_staleness,
+                                      np.zeros(fed.rounds))
+        np.testing.assert_array_equal(res.cloud_uploads,
+                                      np.full(fed.rounds, 3, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Loud failures
+# ---------------------------------------------------------------------------
+
+
+class TestLoudFailures:
+
+    def test_missing_edge_count(self, quickstart_setup):
+        fed, data, model = quickstart_setup
+        hfed = dataclasses.replace(fed, topology="hierarchical")
+        with pytest.raises(ValueError, match="edge_count"):
+            FederatedSpec(model, hfed, data).build()
+
+    def test_unknown_topology(self, quickstart_setup):
+        fed, data, model = quickstart_setup
+        with pytest.raises(ValueError, match="topology"):
+            FederatedSpec(model, fed, data, topology="mesh").build()
+
+    def test_edge_fields_without_hierarchy(self, quickstart_setup):
+        """edge_count set but topology left flat must not silently run a
+        flat federation that looks two-tier."""
+        fed, data, model = quickstart_setup
+        bad = dataclasses.replace(fed, edge_count=4)
+        with pytest.raises(ValueError, match="edge_count"):
+            FederatedSpec(model, bad, data).build()
+        bad = dataclasses.replace(fed, edge_budget=2)
+        with pytest.raises(ValueError, match="edge_budget|edge_count"):
+            FederatedSpec(model, bad, data).build()
+
+    def test_hier_cfg_without_hierarchy(self, quickstart_setup):
+        fed, data, model = quickstart_setup
+        with pytest.raises(ValueError, match="hier_cfg"):
+            FederatedSpec(model, fed, data, hier_cfg=HierarchyConfig()).build()
+
+    def test_greedy_selector_with_outer_stage_refused(self, quickstart_setup):
+        """oort/power_of_choice have no edge-level analogue — outer sampling
+        must not silently fall back to HeteRo-biased edge choice."""
+        fed, data, model = quickstart_setup
+        hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=3)
+        with pytest.raises(ValueError, match="edge-level analogue"):
+            FederatedSpec(model, hfed, data, selector="oort",
+                          hier_cfg=HierarchyConfig(edges_per_round=2)).build()
+        # without outer sampling the greedy selectors run fine (inner only)
+        FederatedSpec(model, hfed, data, selector="oort").build()
+
+    def test_random_selector_uniform_outer_stage(self, quickstart_setup):
+        """selector='random' keeps the edge choice uniform as well."""
+        fed, data, model = quickstart_setup
+        hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=3,
+                                   rounds=3)
+        res = FederatedSpec(model, hfed, data, selector="random",
+                            steps_per_round=1,
+                            hier_cfg=HierarchyConfig(edges_per_round=2),
+                            ).build().run()
+        np.testing.assert_array_equal(res.cloud_uploads,
+                                      np.full(3, 2, np.int64))
+
+    def test_incompatible_aggregator(self, quickstart_setup):
+        fed, data, model = quickstart_setup
+        hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=2)
+        with pytest.raises(ValueError, match="aggregator"):
+            FederatedSpec(model, hfed, data, aggregator="fedavgm").build()
+
+    def test_checkpoint_hook_refused(self, quickstart_setup, tmp_path):
+        from repro.fed import CheckpointHook
+        fed, data, model = quickstart_setup
+        hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=2,
+                                   rounds=2)
+        spec = FederatedSpec(model, hfed, data, steps_per_round=1,
+                             hooks=[CheckpointHook(str(tmp_path), every=1)])
+        with pytest.raises(NotImplementedError, match="hierarchical"):
+            spec.build().run()

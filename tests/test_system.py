@@ -75,7 +75,7 @@ def test_fedprox_reduces_update_norm(vision_setup):
 
 def test_lm_federation_runs():
     """The same loop drives an LM architecture (qwen2 smoke) — selection is
-    model-agnostic (DESIGN.md §4)."""
+    model-agnostic (launch/steps.py)."""
     fed = FedConfig(num_clients=6, participation=0.5, rounds=3, local_epochs=1,
                     local_batch=8, lr=0.05, mu=0.1, seed=0)
     cfg = smoke_variant(get_config("qwen2-0.5b"))
