@@ -15,14 +15,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,table3,table4,table5,"
-                         "kernels,roofline")
+                         "table8,kernels,roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (kernel_bench, roofline_table, table1_selection,
                             table2_participation, table3_ablation,
-                            table4_crossdataset, table5_scaling)
+                            table4_crossdataset, table5_scaling,
+                            table8_selector)
 
     print("name,us_per_call,derived")
     jobs = [
@@ -33,6 +34,7 @@ def main() -> None:
         ("table3", table3_ablation.main),
         ("table4", table4_crossdataset.main),
         ("table5", table5_scaling.main),
+        ("table8", table8_selector.main),
     ]
     for name, fn in jobs:
         if only and name not in only:

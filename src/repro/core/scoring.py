@@ -28,7 +28,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.state import ClientState, staleness as _staleness
+from repro.core.state import ClientState, staleness as _staleness, to_f32
 
 EPS = 1e-8
 
@@ -149,7 +149,11 @@ def compute_score_components(
     ``staleness_override`` replaces the round-counter Δ in the freshness
     term with an externally measured (K,) staleness (see
     :func:`staleness_factor`).
+
+    A bf16-compacted state (``core.state.to_bf16``) is upcast to f32 here —
+    the kernel boundary — so all component arithmetic stays f32.
     """
+    state = to_f32(state)
     return {
         "value": information_value(state),
         "diversity": diversity(state, round_idx, cfg),

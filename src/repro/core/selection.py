@@ -99,36 +99,37 @@ def heterosel_select(
 ) -> Tuple[jax.Array, jax.Array]:
     """HeteRo-Select: Algorithm 1, phases 1–2.
 
-    With ``sel_cfg.use_fused_kernel`` the six score components + softmax run
-    as the single-pass Pallas kernel over the struct-of-arrays state
-    (``kernels.score_select``) — the production large-K path; interpret mode
-    keeps it runnable (and tested) on CPU. Additive form only.
+    With ``sel_cfg.use_fused_kernel`` the six score components + softmax +
+    Gumbel-top-m sampling run as the two-pass multi-block Pallas kernel over
+    the struct-of-arrays state (``kernels.score_select``) — the production
+    large-K path; interpret mode keeps it runnable (and tested) on CPU.
+    Additive form only. The in-kernel sampler draws the same Gumbel noise as
+    :func:`sample_clients`, so for a given key the fused cohort matches the
+    jnp path's.
 
     ``staleness_override`` substitutes a (K,) clock-measured staleness for
     the round counter in the freshness term (Eq 7) — the async engine's
-    path. The fused kernel reads the round counter inside the kernel, so the
-    two are mutually exclusive.
+    path. Both the jnp and the fused-kernel branch accept it (the kernel
+    carries the override as a ninth stacked row).
     """
     tau = dynamic_temperature(round_idx, sel_cfg)
     if sel_cfg.use_fused_kernel:
         if not sel_cfg.additive:
             raise ValueError("fused scoring kernel implements the additive form only")
-        if staleness_override is not None:
-            raise ValueError(
-                "fused scoring kernel computes staleness from the round "
-                "counter in-kernel and cannot take an async clock override; "
-                "use selector='heterosel' for async runs")
         from repro.kernels import ops as kernel_ops  # deferred: pallas optional
 
-        probs, _ = kernel_ops.heterosel_probs(
-            state, jnp.asarray(round_idx, jnp.float32), tau, score_cfg,
+        selected, probs, _ = kernel_ops.heterosel_topm(
+            state, jnp.asarray(round_idx, jnp.float32), tau,
+            sel_cfg.num_selected, key, score_cfg,
+            staleness_override=staleness_override,
             interpret=jax.default_backend() != "tpu",
         )
-    else:
-        scores = compute_scores(state, round_idx, score_cfg,
-                                additive=sel_cfg.additive,
-                                staleness_override=staleness_override)
-        probs = selection_probabilities(scores, tau)
+        mask = jnp.zeros((state.num_clients,), bool).at[selected].set(True)
+        return mask, probs
+    scores = compute_scores(state, round_idx, score_cfg,
+                            additive=sel_cfg.additive,
+                            staleness_override=staleness_override)
+    probs = selection_probabilities(scores, tau)
     mask = sample_clients(key, probs, sel_cfg.num_selected)
     return mask, probs
 
@@ -152,14 +153,20 @@ def power_of_choice_select(
     high-value by assigning them the current max loss (optimistic init) —
     otherwise the method can never discover anyone, which is not what the
     original algorithm (which assumes an oracle loss) does.
+
+    Loss ties (e.g. all-equal optimistic inits at round 0) are broken by a
+    per-candidate jitter drawn from the second split of the key — without
+    it ``lax.top_k`` resolves ties by index order and permanently biases
+    low client ids.
     """
     k = state.num_clients
     m = sel_cfg.num_selected
     d = sel_cfg.poc_candidates or min(2 * m, k)
-    kc, _ = jax.random.split(key)
+    kc, kt = jax.random.split(key)
     cand = sample_clients(kc, jnp.full((k,), 1.0 / k, jnp.float32), d)
     opt_loss = jnp.where(state.has_loss > 0, state.loss_prev, jnp.max(state.loss_prev) + 1.0)
-    cand_loss = jnp.where(cand, opt_loss, -jnp.inf)
+    jitter = jax.random.uniform(kt, (k,), jnp.float32, 0.0, 1e-6)
+    cand_loss = jnp.where(cand, opt_loss + jitter, -jnp.inf)
     _, idx = jax.lax.top_k(cand_loss, m)
     mask = jnp.zeros((k,), bool).at[idx].set(True)
     probs = cand.astype(jnp.float32) / d  # candidate distribution (diagnostic)
@@ -280,18 +287,18 @@ def make_async_selector(
     staleness term then reward genuinely stale clients instead of trusting
     synchronous round counters. Selectors with no freshness term (random,
     power_of_choice) accept and ignore the extra argument, so every selector
-    name works in async mode except ``heterosel_pallas`` (the fused kernel
-    computes staleness in-kernel from the round counter).
+    name works in async mode — including ``heterosel_pallas``, whose kernel
+    carries the clock override as a ninth stacked row.
     """
     score_cfg = score_cfg or HeteRoScoreConfig()
-    if name == "heterosel_pallas":
-        raise ValueError(
-            "selector='heterosel_pallas' computes staleness in-kernel from "
-            "the round counter and cannot consume the async clock; use "
-            "'heterosel' for async runs")
-    if name in ("heterosel", "heterosel_mult"):
-        cfg = sel_cfg if name == "heterosel" else dataclasses.replace(
-            sel_cfg, additive=False)
+    if name in ("heterosel", "heterosel_mult", "heterosel_pallas"):
+        if name == "heterosel":
+            cfg = sel_cfg
+        elif name == "heterosel_mult":
+            cfg = dataclasses.replace(sel_cfg, additive=False)
+        else:
+            cfg = dataclasses.replace(sel_cfg, use_fused_kernel=True,
+                                      additive=True)
 
         def heterosel_async(key, state, round_idx, stale):
             return heterosel_select(key, state, round_idx, sel_cfg=cfg,

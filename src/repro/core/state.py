@@ -78,6 +78,10 @@ def update_client_state(
 ) -> ClientState:
     """Fold one round's observations into the metadata (Algorithm 1, line 24).
 
+    Dtype-preserving: a bf16 state (``to_bf16``) stays bf16 — fresh f32
+    observations are cast down at the write, never promoting the resident
+    arrays back to f32.
+
     Args:
       round_idx: scalar int32 — the just-finished round t.
       selected_mask: (K,) bool — which clients participated this round.
@@ -86,21 +90,44 @@ def update_client_state(
       observed_sqnorm: (K,) — squared update norms of participants.
     """
     sel = selected_mask
-    self_f = sel.astype(jnp.float32)
+    self_f = sel.astype(state.has_loss.dtype)
+    ldt = state.loss_prev.dtype
     new_loss_prev2 = jnp.where(sel, state.loss_prev, state.loss_prev2)
-    new_loss_prev = jnp.where(sel, observed_loss, state.loss_prev)
-    new_has_momentum = jnp.where(sel & (state.has_loss > 0), 1.0, state.has_momentum)
+    new_loss_prev = jnp.where(sel, observed_loss, state.loss_prev).astype(ldt)
+    new_has_momentum = jnp.where(sel & (state.has_loss > 0), 1.0,
+                                 state.has_momentum).astype(state.has_momentum.dtype)
     new_has_loss = jnp.maximum(state.has_loss, self_f)
     return ClientState(
         loss_prev=new_loss_prev,
-        loss_prev2=new_loss_prev2,
+        loss_prev2=new_loss_prev2.astype(state.loss_prev2.dtype),
         label_js=state.label_js,
         part_count=state.part_count + sel.astype(jnp.int32),
         last_selected=jnp.where(sel, jnp.asarray(round_idx, jnp.int32), state.last_selected),
-        update_sqnorm=jnp.where(sel, observed_sqnorm, state.update_sqnorm),
+        update_sqnorm=jnp.where(sel, observed_sqnorm,
+                                state.update_sqnorm).astype(state.update_sqnorm.dtype),
         has_loss=new_has_loss,
         has_momentum=new_has_momentum,
     )
+
+
+def to_bf16(state: ClientState) -> ClientState:
+    """Compact the float metadata to bf16 (the mesh-transformer-jax idiom).
+
+    Halves selection-state memory at large K — at K=10⁶ the SoA drops from
+    ~32 MB to ~20 MB — while the int32 counters (``part_count``,
+    ``last_selected``) keep exact round arithmetic, so the ``NEVER``
+    sentinel and staleness Δ survive untouched. The fused kernel accepts
+    the bf16 rows directly (per-block f32 upcast in-register); the jnp
+    scoring path upcasts at its boundary via :func:`to_f32`.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x, state)
+
+
+def to_f32(state: ClientState) -> ClientState:
+    """Upcast a bf16-compacted state back to f32 (no-op on f32 states)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x, state)
 
 
 def staleness(state: ClientState, round_idx: jax.Array) -> jax.Array:

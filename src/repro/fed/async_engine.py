@@ -51,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Any, List, Optional
 
 import numpy as np
@@ -358,11 +359,13 @@ class AsyncFederatedEngine(FederatedEngine):
         dispatch_time = self.clock.now
 
         # 1. Dispatch: over-select on clock-measured staleness, skip busy.
+        t0 = time.perf_counter()
         self.key, sk = jax.random.split(self.key)
         mask, _ = self._select_async(sk, self.state, jnp.int32(t),
                                      self._staleness_override())
         mask_np = np.asarray(mask) & ~self._in_flight
         selected = np.flatnonzero(mask_np)
+        t1 = time.perf_counter()
 
         # 2. Train the dispatch cohort in one executor call; hold the
         #    updates back and schedule their completions on the clock.
@@ -384,6 +387,8 @@ class AsyncFederatedEngine(FederatedEngine):
                     weight=float(w_np[i]))
                 self.clock.schedule(lat[i], c, t, payload)
             self._in_flight[selected] = True
+
+        t2 = time.perf_counter()
 
         # 3. Close the round at the deadline; carry late updates forward.
         kept, dropped = drain_due_arrivals(self.clock, acfg, t, dispatch_time,
@@ -423,6 +428,10 @@ class AsyncFederatedEngine(FederatedEngine):
             arr_ids = np.asarray([], np.int64)
             obs_loss = np.zeros(spec.data.num_clients, np.float32)
             obs_sqnorm = np.zeros(spec.data.num_clients, np.float32)
+
+        ctx.select_ms = (t1 - t0) * 1e3
+        ctx.execute_ms = (t2 - t1) * 1e3
+        ctx.aggregate_ms = (time.perf_counter() - t2) * 1e3
 
         # 5. Clock bookkeeping + the usual round tail.
         duration = self.clock.now - dispatch_time

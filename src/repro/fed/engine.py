@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
 from typing import (
     Any,
@@ -66,6 +67,7 @@ from repro.core.state import (
     ClientState,
     init_client_state,
     scatter_observations,
+    to_bf16,
     update_client_state,
 )
 from repro.fed import availability as fed_avail
@@ -112,6 +114,13 @@ class FLResult:
     # table7_hierarchy.py compares against flat selection. None for flat
     # runs, where every selected client uploads straight to the cloud.
     cloud_uploads: Optional[np.ndarray] = None
+    # Per-round host-observed phase timings (ms): cohort selection, local
+    # training (executor), and aggregation. Zeros for resumed prefixes (the
+    # checkpoint does not persist wall times). The selection axis is what
+    # benchmarks/table8_selector.py scales to K=10⁶.
+    select_ms: Optional[np.ndarray] = None
+    execute_ms: Optional[np.ndarray] = None
+    aggregate_ms: Optional[np.ndarray] = None
 
     @property
     def peak_acc(self) -> float:
@@ -310,6 +319,10 @@ class RoundContext:
     sim_time: float = 0.0
     num_arrivals: int = 0
     num_stragglers: int = 0
+    # Host-observed phase timings of this round, in milliseconds.
+    select_ms: float = 0.0
+    execute_ms: float = 0.0
+    aggregate_ms: float = 0.0
 
     @property
     def fed(self) -> FedConfig:
@@ -634,14 +647,21 @@ class MetricsHook(RoundHook):
         self.metric: List[float] = []
         self.train_loss: List[float] = []
         self.selected: List[np.ndarray] = []
+        self.select_ms: List[float] = []
+        self.execute_ms: List[float] = []
+        self.aggregate_ms: List[float] = []
 
     def reset(self) -> None:
         self.metric, self.train_loss, self.selected = [], [], []
+        self.select_ms, self.execute_ms, self.aggregate_ms = [], [], []
 
     def on_round_end(self, ctx: RoundContext) -> None:
         self.metric.append(ctx.metric)
         self.train_loss.append(ctx.train_loss)
         self.selected.append(ctx.mask)
+        self.select_ms.append(ctx.select_ms)
+        self.execute_ms.append(ctx.execute_ms)
+        self.aggregate_ms.append(ctx.aggregate_ms)
 
 
 class VerboseHook(RoundHook):
@@ -812,6 +832,12 @@ class FederatedSpec:
     # policy. ``hier_cfg`` holds the partition/outer-budget knobs.
     topology: Optional[str] = None
     hier_cfg: Optional[Any] = None       # fed.hierarchy.HierarchyConfig
+    # Keep the (K,) selection metadata in bf16 (core.state.to_bf16) — halves
+    # selection-state memory at very large K. Scoring upcasts at the kernel
+    # boundary, so selection differs from the f32 run only by bf16 rounding
+    # of the stored observations; off by default to keep golden histories
+    # bitwise.
+    compact_state: bool = False
 
     @property
     def resolved_steps(self) -> int:
@@ -998,6 +1024,8 @@ class FederatedEngine:
         self.params = spec.model.init_params(jax.random.PRNGKey(fed.seed + 1))
         self.state = init_client_state(
             spec.data.num_clients, jnp.asarray(spec.data.label_js, jnp.float32))
+        if spec.compact_state:
+            self.state = to_bf16(self.state)
         self.rng = np.random.default_rng(fed.seed)
         self.start_round = 0
         self._rounds_done = 0
@@ -1024,17 +1052,23 @@ class FederatedEngine:
 
     def _run_round(self, ctx: RoundContext, t: int, eval_batch: Any) -> None:
         spec, fed = self.spec, self.spec.fed
+        t0 = time.perf_counter()
         self.key, sk = jax.random.split(self.key)
         mask, _ = self._select(sk, self.state, jnp.int32(t))
-        mask_np = np.asarray(mask)
+        mask_np = np.asarray(mask)  # device sync — the selection phase ends
         selected = np.flatnonzero(mask_np)
+        t1 = time.perf_counter()
 
         weights = self.aggregator.cohort_weights(selected, spec.data)
         cohort = self.executor.run_round(self.params, selected, self.rng,
                                          weights=weights)
+        t2 = time.perf_counter()
         self.params = self.aggregator.reduce(self.params, cohort)
         self.wire_total += cohort.wire_bytes
         self.raw_total += cohort.raw_bytes
+        ctx.select_ms = (t1 - t0) * 1e3
+        ctx.execute_ms = (t2 - t1) * 1e3
+        ctx.aggregate_ms = (time.perf_counter() - t2) * 1e3
 
         obs_loss, obs_sqnorm = self._dense_observations(selected, cohort)
         self.state = update_client_state(
@@ -1081,6 +1115,9 @@ class FederatedEngine:
             wall_clock=extras.get("wall_clock"),
             round_staleness=extras.get("round_staleness"),
             cloud_uploads=extras.get("cloud_uploads"),
+            select_ms=np.asarray(self.metrics.select_ms),
+            execute_ms=np.asarray(self.metrics.execute_ms),
+            aggregate_ms=np.asarray(self.metrics.aggregate_ms),
         )
 
     # -- checkpoint / resume ----------------------------------------------
@@ -1144,6 +1181,11 @@ class FederatedEngine:
         self.metrics.train_loss = [float(x) for x in arrays["train_loss"]]
         self.metrics.selected = [m.astype(bool)
                                  for m in arrays["selected_history"]]
+        # Wall times are not checkpointed; the resumed prefix reads as 0.
+        n_done = len(self.metrics.metric)
+        self.metrics.select_ms = [0.0] * n_done
+        self.metrics.execute_ms = [0.0] * n_done
+        self.metrics.aggregate_ms = [0.0] * n_done
         for i_str, s in meta.get("hook_states", {}).items():
             i = int(i_str)
             if i < len(self.hooks):

@@ -51,19 +51,26 @@ slice of the state) and the single-edge cloud stage passes the edge
 aggregate through bitwise — so the hierarchical run reproduces the flat
 run's selection history exactly (pinned by tests/test_hierarchy.py).
 
+With ``selector='heterosel_pallas'`` the inner stage runs as ONE segmented
+kernel launch instead of E per-edge programs: the SoA state is relaid
+edge-major into seg-aligned slices once at construction and
+``kernels.score_select.segmented_score_probs`` scores + softmaxes every
+edge's slice in its own grid program. Per-edge Gumbel-top-m sampling stays
+host-dispatched on the same per-edge keys and (|edge|,) probability vectors
+as the jnp path, so the selection history matches ``selector='heterosel'``
+(pinned by tests/test_hierarchy.py).
+
 Known limitations (loud errors): no ``availability`` masks (edge-local
 selection does not thread them yet), no ``CheckpointHook`` (the per-round
 cloud-upload series, and in async mode the clock and in-flight edge buffer,
-are not part of the persisted round state). The async hierarchy inherits
-flat-async's no-``heterosel_pallas``-staleness caveat trivially: inner
-selection uses round-counter staleness (the edge-local table), while
-wall-clock staleness is handled at the cloud by the FedBuff discount.
+are not part of the persisted round state).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -74,8 +81,10 @@ import jax.numpy as jnp
 from repro.core.scoring import HeteRoScoreConfig
 from repro.core.selection import (
     SelectorConfig,
+    dynamic_temperature,
     edge_selection_probs,
     make_selector,
+    sample_clients,
 )
 from repro.core.state import pool_client_state, update_client_state
 from repro.fed import server as fed_server
@@ -222,22 +231,29 @@ class HierarchicalEngine(FederatedEngine):
         self._outer_sel_cfg = (
             dataclasses.replace(base_sel, additive=False)
             if self.selector_name == "heterosel_mult" else base_sel)
-        # One jitted inner selector per distinct (edge size, budget)
+        # Inner-selection machinery. heterosel_pallas scores every edge in
+        # ONE segmented kernel launch (_seg_probs below); everything else
+        # gets one jitted per-edge selector per distinct (edge size, budget)
         # signature — partition_edges balances sizes to within one client,
         # so E edges share at most a couple of compiled programs instead of
         # tracing one per edge. Shapes are static across rounds.
         self._edge_select: Dict[int, Any] = {}
-        by_sig: Dict[Any, Any] = {}
-        for e in range(self.edge_count):
-            b = int(self.budgets[e])
-            if b == 0:
-                continue
-            sig = (len(self._members[e]), b)
-            if sig not in by_sig:
-                cfg_e = dataclasses.replace(base_sel, num_selected=b)
-                by_sig[sig] = jax.jit(
-                    make_selector(self.selector_name, cfg_e, self._score_cfg))
-            self._edge_select[e] = by_sig[sig]
+        self._seg_probs: Optional[Any] = None
+        if self.selector_name == "heterosel_pallas":
+            self._init_segmented_selection(base_sel)
+        else:
+            by_sig: Dict[Any, Any] = {}
+            for e in range(self.edge_count):
+                b = int(self.budgets[e])
+                if b == 0:
+                    continue
+                sig = (len(self._members[e]), b)
+                if sig not in by_sig:
+                    cfg_e = dataclasses.replace(base_sel, num_selected=b)
+                    by_sig[sig] = jax.jit(
+                        make_selector(self.selector_name, cfg_e,
+                                      self._score_cfg))
+                self._edge_select[e] = by_sig[sig]
 
         if self.policy == "async":
             self.acfg: AsyncConfig = spec.async_cfg or AsyncConfig()
@@ -258,6 +274,40 @@ class HierarchicalEngine(FederatedEngine):
                     "does not compose with the hierarchical cloud stage "
                     "(edge aggregates combine as weighted deltas, not a "
                     "cohort reduce); use 'fedavg' or 'fedavg_weighted'")
+
+    def _init_segmented_selection(self, base_sel: SelectorConfig) -> None:
+        """The heterosel_pallas inner-stage fast path: one segmented kernel.
+
+        Lays the (K,) SoA state out edge-major once — edge e owns the
+        seg-aligned slice ``[e·seg, e·seg + |edge e|)`` of a (E·seg,)
+        permutation, padding slots masked inside the kernel — so scoring +
+        softmax for ALL edges is a single ``segmented_score_probs`` launch
+        (grid=(E,)) instead of E gather + jnp programs per round.
+        """
+        from repro.kernels import ops as kernel_ops  # deferred: pallas optional
+        from repro.kernels.score_select import LANE
+
+        seg = -(-max(int(self.partition.sizes.max()), 1) // LANE) * LANE
+        perm = np.zeros(self.edge_count * seg, np.int64)
+        for e in range(self.edge_count):
+            members = self._members[e]
+            perm[e * seg:e * seg + len(members)] = members
+        self._seg = seg
+        seg_perm = jnp.asarray(perm)
+        seg_sizes = jnp.asarray(self.partition.sizes, jnp.int32)
+        score_cfg = self._score_cfg
+        interpret = jax.default_backend() != "tpu"
+
+        def segmented_probs(state, round_idx):
+            sstate = jax.tree_util.tree_map(lambda x: x[seg_perm], state)
+            tau = dynamic_temperature(round_idx, base_sel)
+            probs, _ = kernel_ops.heterosel_probs_segmented(
+                sstate, seg_sizes,
+                round_idx=jnp.asarray(round_idx, jnp.float32), tau=tau,
+                cfg=score_cfg, seg=seg, interpret=interpret)
+            return probs
+
+        self._seg_probs = jax.jit(segmented_probs)
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -325,19 +375,42 @@ class HierarchicalEngine(FederatedEngine):
         split = jax.random.split(sk, self.edge_count)
         return {e: split[e] for e in range(self.edge_count)}
 
-    def _inner_round(self, active: List[int], keys: Dict[int, jax.Array],
-                     t: int) -> List[EdgeCohort]:
-        """Inner per-edge selection + one executor call per active edge."""
-        out: List[EdgeCohort] = []
+    def _inner_select(self, active: List[int], keys: Dict[int, jax.Array],
+                      t: int) -> List[tuple]:
+        """Inner per-edge selection: (edge, global cohort ids) pairs.
+
+        The segmented fast path (heterosel_pallas) scores every edge in one
+        kernel launch, then samples each active edge's cohort host-side with
+        the SAME per-edge key and (|edge|,) probability vector the jnp path
+        would use — which is what keeps the selection histories equal.
+        """
+        picks: List[tuple] = []
+        if self._seg_probs is not None:
+            probs_all = np.asarray(self._seg_probs(self.state, jnp.int32(t)))
+            for e in active:
+                members = self._members[e]
+                probs_e = jnp.asarray(
+                    probs_all[e * self._seg:e * self._seg + len(members)])
+                mask_local = sample_clients(keys[e], probs_e,
+                                            int(self.budgets[e]))
+                sel_local = np.flatnonzero(np.asarray(mask_local))
+                if len(sel_local):
+                    picks.append((e, members[sel_local]))
+            return picks
         for e in active:
             members = self._members[e]
             idx = jnp.asarray(members)
             estate = jax.tree_util.tree_map(lambda x: x[idx], self.state)
             mask_local, _ = self._edge_select[e](keys[e], estate, jnp.int32(t))
             sel_local = np.flatnonzero(np.asarray(mask_local))
-            if not len(sel_local):
-                continue
-            sel_global = members[sel_local]
+            if len(sel_local):
+                picks.append((e, members[sel_local]))
+        return picks
+
+    def _inner_execute(self, picks: List[tuple]) -> List[EdgeCohort]:
+        """One executor call per selected edge cohort."""
+        out: List[EdgeCohort] = []
+        for e, sel_global in picks:
             weights = self.aggregator.cohort_weights(sel_global, self.spec.data)
             cohort = self.executor.run_round(self.params, sel_global, self.rng,
                                              weights=weights)
@@ -395,9 +468,13 @@ class HierarchicalEngine(FederatedEngine):
 
     def _run_round_sync(self, ctx: RoundContext, t: int, eval_batch: Any) -> None:
         spec = self.spec
+        t0 = time.perf_counter()
         self.key, sk = jax.random.split(self.key)
         active = self._choose_edges(sk, t, self._idle_edges())
-        cohorts = self._inner_round(active, self._inner_keys(sk), t)
+        picks = self._inner_select(active, self._inner_keys(sk), t)
+        t1 = time.perf_counter()
+        cohorts = self._inner_execute(picks)
+        t2 = time.perf_counter()
 
         if len(cohorts) == 1:
             # The weighted mean of one edge aggregate is that aggregate —
@@ -411,6 +488,9 @@ class HierarchicalEngine(FederatedEngine):
             self.params = fed_server.apply_weighted_deltas(
                 self.params, deltas, w)
         self.cloud_uploads.append(len(cohorts))
+        ctx.select_ms = (t1 - t0) * 1e3
+        ctx.execute_ms = (t2 - t1) * 1e3
+        ctx.aggregate_ms = (time.perf_counter() - t2) * 1e3
 
         self._fold_observations(ctx, t, cohorts)
         ctx.metric = self.eval_fn(spec.model, self.params, eval_batch)
@@ -423,16 +503,20 @@ class HierarchicalEngine(FederatedEngine):
         # 1.–2. Dispatch idle edges; each trains now but its aggregate
         # arrives at the cloud after the max of its cohort's latencies
         # (the edge is an internal barrier).
+        t0 = time.perf_counter()
         self.key, sk = jax.random.split(self.key)
         active = self._choose_edges(sk, t, self._idle_edges())
+        picks = self._inner_select(active, self._inner_keys(sk), t)
+        t1 = time.perf_counter()
         dispatched = np.zeros(spec.data.num_clients, bool)
-        for c in self._inner_round(active, self._inner_keys(sk), t):
+        for c in self._inner_execute(picks):
             c.delta = fed_server.params_delta_f32(c.avg_params, self.params)
             c.avg_params = None  # the anchor-relative delta is what travels
             lat = float(self.latency.sample(c.selected, self.rng).max())
             self.clock.schedule(lat, c.edge, t, payload=c)
             self._edge_in_flight[c.edge] = True
             dispatched[c.selected] = True
+        t2 = time.perf_counter()
 
         # 3. Close the cloud round at the deadline (the shared flat-async
         # semantics — drain_due_arrivals); straggler edges carry forward as
@@ -456,6 +540,9 @@ class HierarchicalEngine(FederatedEngine):
             )
             self.params = self.aggregator.reduce(self.params, agg_cohort)
         self.cloud_uploads.append(len(kept))
+        ctx.select_ms = (t1 - t0) * 1e3
+        ctx.execute_ms = (t2 - t1) * 1e3
+        ctx.aggregate_ms = (time.perf_counter() - t2) * 1e3
         self._fold_observations(ctx, t, arrivals, dispatched_mask=dispatched)
 
         n_stragglers = sum(1 for ev in kept if ev.dispatch_round < t)

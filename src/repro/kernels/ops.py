@@ -84,12 +84,67 @@ def ssd_forward(x, dt, a_neg, b_in, c_in, *, chunk: int = 256,
 
 
 def heterosel_probs(state: ClientState, round_idx, tau,
-                    cfg: HeteRoScoreConfig, *, interpret: bool = False):
+                    cfg: HeteRoScoreConfig, *, staleness_override=None,
+                    interpret: bool = False, block=None):
     """Fused additive scoring + softmax (Eqs 1–12) via Pallas.
 
     ``score_inputs`` owns the state-field → kernel-argument ordering.
+    ``staleness_override`` threads the async clock's (K,) Δ into the Eq-7
+    freshness term; ``block`` overrides the VMEM block width.
     """
     return _ss.fused_score_probs(
         *score_inputs(state),
-        round_idx=round_idx, tau=tau, cfg=cfg, interpret=interpret,
+        round_idx=round_idx, tau=tau, cfg=cfg,
+        staleness_override=staleness_override, interpret=interpret,
+        block=block,
+    )
+
+
+def heterosel_topm(state: ClientState, round_idx, tau, m: int, key,
+                   cfg: HeteRoScoreConfig, *, staleness_override=None,
+                   interpret: bool = False, block=None):
+    """Fused scoring + softmax + in-kernel Gumbel-top-m selection.
+
+    Returns ``(selected_idx (m,), probs, scores)``. For the same PRNG key
+    the selection matches ``sample_clients`` over the jnp probabilities —
+    the Gumbel noise is drawn identically and ranking the unnormalized
+    logits is ranking the log-probabilities.
+    """
+    return _ss.fused_score_select(
+        *score_inputs(state),
+        round_idx=round_idx, tau=tau, m=m, key=key, cfg=cfg,
+        staleness_override=staleness_override, interpret=interpret,
+        block=block,
+    )
+
+
+def heterosel_probs_segmented(state: ClientState, sizes, *, round_idx, tau,
+                              cfg: HeteRoScoreConfig, seg: int,
+                              staleness_override=None,
+                              interpret: bool = False):
+    """Per-edge fused scoring over an edge-major (E·seg,) state in ONE
+    kernel launch — the hierarchical engine's inner-selection fast path.
+
+    ``state`` must already be laid out edge-major with ``seg``-aligned
+    slices (see ``fed.hierarchy``); ``sizes`` is the (E,) member count of
+    each slice. Returns ``(probs, scores)`` in the same layout.
+    """
+    return _ss.segmented_score_probs(
+        *score_inputs(state),
+        sizes=sizes, round_idx=round_idx, tau=tau, cfg=cfg, seg=seg,
+        staleness_override=staleness_override, interpret=interpret,
+    )
+
+
+def heterosel_topm_sharded(state: ClientState, round_idx, tau, m: int, key,
+                           cfg: HeteRoScoreConfig, *, mesh,
+                           axis: str = "clients", staleness_override=None,
+                           interpret: bool = False, block=None):
+    """`heterosel_topm` with state + scoring sharded over a client device
+    axis (shard_map + cross-shard collectives). Same return contract."""
+    return _ss.sharded_score_select(
+        *score_inputs(state),
+        round_idx=round_idx, tau=tau, m=m, key=key, cfg=cfg, mesh=mesh,
+        axis=axis, staleness_override=staleness_override,
+        interpret=interpret, block=block,
     )

@@ -1,23 +1,44 @@
-"""Pallas TPU kernel: fused HeteRo-Select scoring + softmax (paper Eqs 1–12).
+"""Pallas TPU kernels: fused HeteRo-Select scoring, softmax and top-m
+selection (paper Eqs 1–12) at population scale.
 
 The paper's federation has 12 clients; production cross-device federations
 have 10⁴–10⁶. At that scale the six score components + softmax over K
-clients become a fused single-pass kernel: all (K,)-metadata vectors stream
-through VMEM once, min/max/mean statistics and the softmax normalizer are
-computed in-register, and the output is the selection distribution p_k(t).
+clients become a fused two-pass kernel over a real multi-block grid:
 
-Block layout: K padded to a multiple of 128 (lane width); one program per
-block with the cross-block reductions done in a first pass over a single
-block grid — for K ≤ 131072 the whole state fits one VMEM block, which is
-the shipped configuration (grid=(1,)).
+  * pass 1 (``_stats_kernel``): each grid step reduces one VMEM block of the
+    stacked client metadata to five lane-slotted partials (loss min/max,
+    Σ‖Δw‖² and observation count for the norm penalty, participation max);
+    the (nblocks, LANE) partial table is combined into global statistics
+    with a handful of O(nblocks) jnp reductions.
+  * pass 2 (``_select_kernel`` / ``_score_kernel``): blocks stream through
+    VMEM again computing scores, block-local softmax exponentials with a
+    flash-attention-style (m_b, l_b) normalizer merge, and — in the fused
+    selection variant — the per-block Gumbel-top-m candidates, so the (K,)
+    probability vector never has to be sorted or round-tripped to pick the
+    cohort. Per-block top-min(m, block) candidates are exact: any global
+    top-m element is beaten by at most m−1 others, hence survives its
+    block-local cut.
+
+All (K,) operands travel as ONE stacked ``(NROWS, Kpad)`` array padded once
+(bf16 when the ClientState is bf16 — see ``core.state.to_bf16`` — so a
+K=10⁶ federation feeds the kernel ~18 MB, not 8 separate f32 pads). Row
+``ROW_STALE`` carries the async engine's clock-measured staleness override
+(Eq 7); a scalar lane toggles it so sync and async share one kernel.
+
+``segmented_score_probs`` scores E block-aligned edge slices in a single
+grid=(E,) launch for the hierarchical engine's inner selection, and
+``sharded_score_select`` distributes state + scoring over a client device
+axis via shard_map, with cross-shard collectives for the min/max/mean
+statistics, the softmax normalizer, and the top-m candidate merge.
 
 VALIDATED against ``repro.core.scoring`` + softmax (the paper-faithful jnp
-implementation) in tests/test_kernels_score.py.
+implementation) in tests/test_kernels.py.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,95 +46,504 @@ from jax.experimental import pallas as pl
 
 from repro.core.scoring import HeteRoScoreConfig
 
-LANE = 128
+LANE = 128          # TPU lane width — every padded extent is a multiple
+MAX_BLOCK = 32768   # widest client block streamed through VMEM per grid step
 BIG = 1e30
 
+# Row layout of the stacked (NROWS, Kpad) operand: the eight ClientState
+# vectors in ``core.state.score_inputs`` order + the staleness-override row.
+(ROW_LOSS, ROW_LOSS2, ROW_JS, ROW_CNT, ROW_LAST, ROW_SQ, ROW_HASL,
+ ROW_HASM, ROW_STALE) = range(9)
+NROWS = 9
 
-def _score_kernel(loss_ref, loss2_ref, js_ref, cnt_ref, lastsel_ref,
-                  sqnorm_ref, hasloss_ref, hasmom_ref, scalars_ref,
-                  probs_ref, scores_ref, *,
-                  cfg: HeteRoScoreConfig, k_valid: int, kpad: int):
-    t = scalars_ref[0]
-    tau = scalars_ref[1]
+# Scalar lanes of the (1, LANE) f32 scalar operand (pass-2 kernels).
+(SC_T, SC_TAU, SC_USEOV, SC_LMIN, SC_LMAX, SC_AVGSQ, SC_HMAX, SC_OFF,
+ SC_KLIM) = range(9)
 
-    valid = jax.lax.broadcasted_iota(jnp.int32, (kpad,), 0) < k_valid
-    loss = loss_ref[...]
-    loss2 = loss2_ref[...]
-    has_loss = hasloss_ref[...] > 0
-    has_mom = hasmom_ref[...] > 0
-    obs = valid & has_loss
+# Lane slots of the (nblocks, LANE) pass-1 partial-statistics table.
+(ST_LMIN, ST_LMAX, ST_SUMSQ, ST_NOBS, ST_HMAX) = range(5)
+
+
+def _layout(k: int, block: Optional[int]) -> tuple[int, int, int]:
+    """(block, nblocks, kpad) — block floored to a LANE multiple and clamped
+    so a single-block launch is used whenever K fits one VMEM block."""
+    kpad_lane = -(-k // LANE) * LANE
+    blk = block or MAX_BLOCK
+    blk = max(LANE, (blk // LANE) * LANE)
+    blk = min(blk, kpad_lane)
+    nblocks = -(-kpad_lane // blk)
+    return blk, nblocks, nblocks * blk
+
+
+def _pack(rows, staleness_override, k: int, kpad: int) -> jax.Array:
+    """One stacked (NROWS, kpad) operand, padded once.
+
+    Feed dtype follows the state: a bf16 ClientState streams as bf16 (the
+    per-block f32 upcast happens in-register inside the kernel), so no
+    per-client f32 duplicate is ever materialized at large K.
+    """
+    feed = jnp.bfloat16 if rows[0].dtype == jnp.bfloat16 else jnp.float32
+    if staleness_override is None:
+        stale = jnp.zeros((k,), feed)
+    else:
+        stale = jnp.asarray(staleness_override).astype(feed)
+    stacked = jnp.stack([r.astype(feed) for r in rows] + [stale])
+    return jnp.pad(stacked, ((0, 0), (0, kpad - k)))
+
+
+def _scalar_row(t, tau, use_ov, lmin, lmax, avgsq, hmax, off, klim) -> jax.Array:
+    vals = jnp.stack([jnp.asarray(v, jnp.float32) for v in
+                      (t, tau, use_ov, lmin, lmax, avgsq, hmax, off, klim)])
+    return jnp.zeros((LANE,), jnp.float32).at[:vals.shape[0]].set(vals).reshape(1, LANE)
+
+
+def _lane_put(shape_lanes: int, j: int, v) -> jax.Array:
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, shape_lanes), 1)
+    return jnp.where(lane == j, v, 0.0)
+
+
+def _stats_kernel(state_ref, scal_ref, out_ref, *, block: int):
+    """Pass 1: per-block partials for the cross-block scoring statistics."""
+    i = pl.program_id(0)
+    off = scal_ref[0, SC_OFF].astype(jnp.int32)
+    klim = scal_ref[0, SC_KLIM].astype(jnp.int32)
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1) + i * block + off
+    valid = col < klim
+
+    loss = state_ref[ROW_LOSS:ROW_LOSS + 1, :].astype(jnp.float32)
+    sq = state_ref[ROW_SQ:ROW_SQ + 1, :].astype(jnp.float32)
+    cnt = state_ref[ROW_CNT:ROW_CNT + 1, :].astype(jnp.float32)
+    obs = valid & (state_ref[ROW_HASL:ROW_HASL + 1, :].astype(jnp.float32) > 0)
+
+    out_ref[...] = (
+        _lane_put(LANE, ST_LMIN, jnp.min(jnp.where(obs, loss, BIG)))
+        + _lane_put(LANE, ST_LMAX, jnp.max(jnp.where(obs, loss, -BIG)))
+        + _lane_put(LANE, ST_SUMSQ, jnp.sum(jnp.where(obs, sq, 0.0)))
+        + _lane_put(LANE, ST_NOBS, jnp.sum(jnp.where(obs, 1.0, 0.0)))
+        + _lane_put(LANE, ST_HMAX, jnp.max(jnp.where(valid, cnt, 0.0)))
+    )
+
+
+def _combine_stats(stats: jax.Array):
+    """Fold the (nblocks, LANE) partial table into the four global scalars.
+
+    min-of-mins / max-of-maxes are exact; the Σ‖Δw‖² recombination differs
+    from a monolithic jnp.sum only in f32 summation order.
+    """
+    lmin = jnp.min(stats[:, ST_LMIN])
+    lmax = jnp.max(stats[:, ST_LMAX])
+    avgsq = jnp.sum(stats[:, ST_SUMSQ]) / jnp.maximum(jnp.sum(stats[:, ST_NOBS]), 1.0)
+    hmax = jnp.maximum(jnp.max(stats[:, ST_HMAX]), 1.0)
+    return lmin, lmax, avgsq, hmax
+
+
+def _block_scores(rows, scal_ref, valid, cfg: HeteRoScoreConfig) -> jax.Array:
+    """Six score components + Eq (1) additive combination for one block.
+
+    ``rows(j)`` yields the (1, block) f32 view of stacked row j; the global
+    statistics arrive pre-reduced in the scalar lanes.
+    """
+    t = scal_ref[0, SC_T]
+    loss = rows(ROW_LOSS)
+    loss2 = rows(ROW_LOSS2)
+    has_loss = rows(ROW_HASL) > 0
+    has_mom = rows(ROW_HASM) > 0
 
     # Eq (3): min-max normalized information value (neutral 0.5 if unseen)
-    lmin = jnp.min(jnp.where(obs, loss, BIG))
-    lmax = jnp.max(jnp.where(obs, loss, -BIG))
+    lmin = scal_ref[0, SC_LMIN]
+    lmax = scal_ref[0, SC_LMAX]
     v = jnp.clip((loss - lmin) / (lmax - lmin + 1e-8), 0.0, 1.0)
     v = jnp.where(has_loss, v, 0.5)
 
     # Eq (4): diversity with decaying weight
     decay = 2.0 * (1.0 - 0.5 * jnp.minimum(t / cfg.diversity_decay_rounds, 1.0))
-    div = js_ref[...] * decay
+    div = rows(ROW_JS) * decay
 
     # Eq (5): sigmoid momentum
     m = jnp.where(has_mom, (loss2 - loss) / (loss2 + 1e-8), 0.0)
     mom = 2.0 / (1.0 + jnp.exp(-5.0 * m)) - 0.5
 
     # Eq (6): fairness
-    cnt = cnt_ref[...]
-    hmax = jnp.maximum(jnp.max(jnp.where(valid, cnt, 0.0)), 1.0)
-    fair = (1.0 + cfg.eta * cnt / hmax) ** (-2)
+    fair = (1.0 + cfg.eta * rows(ROW_CNT) / scal_ref[0, SC_HMAX]) ** (-2)
 
-    # Eq (7): staleness
-    stale = jnp.minimum(jnp.maximum(t - lastsel_ref[...], 0.0), float(cfg.t_max))
-    st = 1.0 + cfg.gamma * jnp.log1p(stale)
+    # Eq (7): staleness — round-counter Δ or the async clock override row
+    use_ov = scal_ref[0, SC_USEOV]
+    delta = jnp.where(use_ov > 0,
+                      jnp.maximum(rows(ROW_STALE), 0.0),
+                      jnp.maximum(t - rows(ROW_LAST), 0.0))
+    delta = jnp.minimum(delta, float(cfg.t_max))
+    st = 1.0 + cfg.gamma * jnp.log1p(delta)
 
     # Eq (11): update-norm penalty
-    sq = sqnorm_ref[...]
-    n_obs = jnp.maximum(jnp.sum(jnp.where(obs, 1.0, 0.0)), 1.0)
-    avg = jnp.sum(jnp.where(obs, sq, 0.0)) / n_obs
-    r = jnp.where(has_loss, sq / (avg + 1e-8), 1.0)
+    r = jnp.where(has_loss, rows(ROW_SQ) / (scal_ref[0, SC_AVGSQ] + 1e-8), 1.0)
     npen = 1.0 - cfg.alpha * (2.0 / (1.0 + jnp.exp(-3.0 * r)) - 1.0)
 
     # Eq (1) additive combination (Eqs 8–10 shift the modulating factors)
-    s = (cfg.w_value * v + cfg.w_diversity * div + cfg.w_momentum * mom
-         + cfg.w_fairness * (fair - 1.0) + cfg.w_staleness * (st - 1.0)
-         + cfg.w_norm * (npen - 1.0))
-    scores_ref[...] = s
+    return (cfg.w_value * v + cfg.w_diversity * div + cfg.w_momentum * mom
+            + cfg.w_fairness * (fair - 1.0) + cfg.w_staleness * (st - 1.0)
+            + cfg.w_norm * (npen - 1.0))
 
-    # Eq (12): softmax with temperature τ(t) over valid clients
-    z = jnp.where(valid, s / tau, -BIG)
-    zmax = jnp.max(z)
-    e = jnp.where(valid, jnp.exp(z - zmax), 0.0)
+
+def _rows_fn(state_ref):
+    return lambda j: state_ref[j:j + 1, :].astype(jnp.float32)
+
+
+def _score_body(state_ref, scal_ref, *, cfg, block):
+    """Shared pass-2 prologue: scores, block softmax exponentials, (m_b, l_b)."""
+    i = pl.program_id(0)
+    off = scal_ref[0, SC_OFF].astype(jnp.int32)
+    klim = scal_ref[0, SC_KLIM].astype(jnp.int32)
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, block), 1) + i * block + off
+    valid = col < klim
+    s = _block_scores(_rows_fn(state_ref), scal_ref, valid, cfg)
+    z = jnp.where(valid, s / scal_ref[0, SC_TAU], -BIG)
+    m_b = jnp.max(z)
+    e = jnp.where(valid, jnp.exp(z - m_b), 0.0)
+    return s, z, e, m_b, col
+
+
+def _score_kernel(state_ref, scal_ref, scores_ref, e_ref, part_ref, *,
+                  cfg: HeteRoScoreConfig, block: int):
+    s, _, e, m_b, _ = _score_body(state_ref, scal_ref, cfg=cfg, block=block)
+    scores_ref[...] = s
+    e_ref[...] = e
+    part_ref[...] = _lane_put(LANE, 0, m_b) + _lane_put(LANE, 1, jnp.sum(e))
+
+
+def _select_kernel(state_ref, scal_ref, gumbel_ref, scores_ref, e_ref,
+                   part_ref, cval_ref, cidx_ref, *,
+                   cfg: HeteRoScoreConfig, block: int, mb_pad: int):
+    """Pass 2 + in-kernel Gumbel-top-m: emits per-block selection candidates
+    (perturbed logit + global client id) alongside the softmax pieces, so
+    sampling never sorts the (K,) probability vector at the jnp level."""
+    i = pl.program_id(0)
+    s, z, e, m_b, col = _score_body(state_ref, scal_ref, cfg=cfg, block=block)
+    scores_ref[...] = s
+    e_ref[...] = e
+    part_ref[...] = _lane_put(LANE, 0, m_b) + _lane_put(LANE, 1, jnp.sum(e))
+    # Gumbel-perturbed unnormalized logits: ranking z + g equals ranking
+    # log p + g (constant −logsumexp shift), so no normalizer is needed.
+    pert = z + gumbel_ref[...].astype(jnp.float32)
+    vals, loc = jax.lax.top_k(pert, mb_pad)
+    cval_ref[...] = vals
+    off = scal_ref[0, SC_OFF].astype(jnp.int32)
+    cidx_ref[...] = loc + i * block + off
+
+
+def _segment_kernel(state_ref, size_ref, scal_ref, probs_ref, scores_ref, *,
+                    cfg: HeteRoScoreConfig, seg: int):
+    """One edge slice per grid step: stats + scores + softmax fully in-block.
+
+    Per-edge statistics (loss min/max, norm average, participation max) are
+    reduced over that edge's ``size_e`` valid rows only — exactly what the
+    per-edge jnp path computes on its gathered sub-state.
+    """
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, seg), 1)
+    valid = col < size_ref[0, 0].astype(jnp.int32)
+    rows = _rows_fn(state_ref)
+    loss = rows(ROW_LOSS)
+    sq = rows(ROW_SQ)
+    obs = valid & (rows(ROW_HASL) > 0)
+    lmin = jnp.min(jnp.where(obs, loss, BIG))
+    lmax = jnp.max(jnp.where(obs, loss, -BIG))
+    avgsq = jnp.sum(jnp.where(obs, sq, 0.0)) / jnp.maximum(
+        jnp.sum(jnp.where(obs, 1.0, 0.0)), 1.0)
+    hmax = jnp.maximum(jnp.max(jnp.where(valid, rows(ROW_CNT), 0.0)), 1.0)
+    scal = scal_ref[...]
+    scal = (scal
+            + _lane_put(LANE, SC_LMIN, lmin) + _lane_put(LANE, SC_LMAX, lmax)
+            + _lane_put(LANE, SC_AVGSQ, avgsq) + _lane_put(LANE, SC_HMAX, hmax))
+
+    class _Scal:  # duck-typed scalar view for _block_scores
+        def __getitem__(self, idx):
+            return scal[idx]
+
+    s = _block_scores(rows, _Scal(), valid, cfg)
+    scores_ref[...] = s
+    z = jnp.where(valid, s / scal[0, SC_TAU], -BIG)
+    e = jnp.where(valid, jnp.exp(z - jnp.max(z)), 0.0)
     probs_ref[...] = e / jnp.maximum(jnp.sum(e), 1e-30)
+
+
+def _normalize(e_flat: jax.Array, part: jax.Array, nblocks: int,
+               block: int) -> jax.Array:
+    """Merge per-block (m_b, l_b) into global probabilities.
+
+    probs = e_block · exp(m_b − M) / L with M = max m_b and
+    L = Σ l_b·exp(m_b − M) — the flash-attention normalizer merge. With a
+    single block this reduces to e / Σe bitwise (scale = exp(0) = 1).
+    """
+    m_b = part[:, 0]
+    l_b = part[:, 1]
+    mglob = jnp.max(m_b)
+    scale = jnp.exp(m_b - mglob)
+    lglob = jnp.maximum(jnp.sum(l_b * scale), 1e-30)
+    return (e_flat.reshape(nblocks, block) * scale[:, None] / lglob).reshape(-1)
+
+
+def _run_stats(stacked, scal0, *, nblocks, block, interpret):
+    kernel = functools.partial(_stats_kernel, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((NROWS, block), lambda i: (0, i)),
+                  pl.BlockSpec((1, LANE), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, LANE), jnp.float32),
+        interpret=interpret,
+    )(stacked, scal0)
 
 
 def fused_score_probs(
     loss_prev, loss_prev2, label_js, part_count, last_selected,
     update_sqnorm, has_loss, has_momentum,
-    *, round_idx, tau, cfg: HeteRoScoreConfig, interpret: bool = False,
+    *, round_idx, tau, cfg: HeteRoScoreConfig,
+    staleness_override=None, interpret: bool = False,
+    block: Optional[int] = None,
 ):
-    """Fused scores + selection probabilities for K clients. Returns (probs, scores)."""
+    """Fused scores + selection probabilities for K clients (any K).
+
+    Returns ``(probs, scores)``, both ``(K,)`` f32. ``staleness_override``
+    substitutes a clock-measured (K,) Δ for the round-counter staleness in
+    Eq (7) — the async engine's path. ``block`` overrides the VMEM block
+    width (testing / tuning); default streams 32768-client blocks.
+    """
     k = loss_prev.shape[0]
-    kpad = -(-k // LANE) * LANE
+    blk, nblocks, kpad = _layout(k, block)
+    rows = (loss_prev, loss_prev2, label_js, part_count, last_selected,
+            update_sqnorm, has_loss, has_momentum)
+    stacked = _pack(rows, staleness_override, k, kpad)
+    t = jnp.asarray(round_idx, jnp.float32)
+    use_ov = 0.0 if staleness_override is None else 1.0
+    scal0 = _scalar_row(t, tau, use_ov, 0.0, 0.0, 0.0, 1.0, 0.0, k)
+    stats = _run_stats(stacked, scal0, nblocks=nblocks, block=blk,
+                       interpret=interpret)
+    lmin, lmax, avgsq, hmax = _combine_stats(stats)
+    scal = _scalar_row(t, tau, use_ov, lmin, lmax, avgsq, hmax, 0.0, k)
 
-    def pad(x):
-        return jnp.pad(x.astype(jnp.float32), (0, kpad - k))
+    kernel = functools.partial(_score_kernel, cfg=cfg, block=blk)
+    scores, e, part = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((NROWS, blk), lambda i: (0, i)),
+                  pl.BlockSpec((1, LANE), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((1, blk), lambda i: (0, i)),
+                   pl.BlockSpec((1, blk), lambda i: (0, i)),
+                   pl.BlockSpec((1, LANE), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, kpad), jnp.float32),
+                   jax.ShapeDtypeStruct((1, kpad), jnp.float32),
+                   jax.ShapeDtypeStruct((nblocks, LANE), jnp.float32)],
+        interpret=interpret,
+    )(stacked, scal)
+    probs = _normalize(e.reshape(-1), part, nblocks, blk)
+    return probs[:k], scores.reshape(-1)[:k]
 
-    args = [pad(a) for a in (loss_prev, loss_prev2, label_js,
-                             part_count, last_selected,
-                             update_sqnorm, has_loss, has_momentum)]
-    scalars = jnp.stack([jnp.asarray(round_idx, jnp.float32),
-                         jnp.asarray(tau, jnp.float32)])
 
-    kernel = functools.partial(_score_kernel, cfg=cfg, k_valid=k, kpad=kpad)
+def fused_score_select(
+    loss_prev, loss_prev2, label_js, part_count, last_selected,
+    update_sqnorm, has_loss, has_momentum,
+    *, round_idx, tau, m: int, key, cfg: HeteRoScoreConfig,
+    staleness_override=None, interpret: bool = False,
+    block: Optional[int] = None,
+):
+    """Fused scoring + softmax + Gumbel-top-m selection.
+
+    Returns ``(selected_idx, probs, scores)`` — ``selected_idx`` is ``(m,)``
+    int32. The Gumbel noise is drawn host-side with the exact shape/dtype
+    ``core.selection.sample_clients`` uses, so for the same key the fused
+    selection matches the jnp path (ranking z + g ≡ ranking log p + g).
+    Per-block top-min(m, block) candidates keep the global top-m exact.
+    """
+    k = loss_prev.shape[0]
+    blk, nblocks, kpad = _layout(k, block)
+    rows = (loss_prev, loss_prev2, label_js, part_count, last_selected,
+            update_sqnorm, has_loss, has_momentum)
+    stacked = _pack(rows, staleness_override, k, kpad)
+    t = jnp.asarray(round_idx, jnp.float32)
+    use_ov = 0.0 if staleness_override is None else 1.0
+    scal0 = _scalar_row(t, tau, use_ov, 0.0, 0.0, 0.0, 1.0, 0.0, k)
+    stats = _run_stats(stacked, scal0, nblocks=nblocks, block=blk,
+                       interpret=interpret)
+    lmin, lmax, avgsq, hmax = _combine_stats(stats)
+    scal = _scalar_row(t, tau, use_ov, lmin, lmax, avgsq, hmax, 0.0, k)
+
+    gumbel = jax.random.gumbel(key, (k,), jnp.float32)
+    gpad = jnp.pad(gumbel, (0, kpad - k)).reshape(1, kpad)
+    mb_pad = -(-min(m, blk) // LANE) * LANE
+
+    kernel = functools.partial(_select_kernel, cfg=cfg, block=blk, mb_pad=mb_pad)
+    scores, e, part, cval, cidx = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((NROWS, blk), lambda i: (0, i)),
+                  pl.BlockSpec((1, LANE), lambda i: (0, 0)),
+                  pl.BlockSpec((1, blk), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1, blk), lambda i: (0, i)),
+                   pl.BlockSpec((1, blk), lambda i: (0, i)),
+                   pl.BlockSpec((1, LANE), lambda i: (i, 0)),
+                   pl.BlockSpec((1, mb_pad), lambda i: (i, 0)),
+                   pl.BlockSpec((1, mb_pad), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, kpad), jnp.float32),
+                   jax.ShapeDtypeStruct((1, kpad), jnp.float32),
+                   jax.ShapeDtypeStruct((nblocks, LANE), jnp.float32),
+                   jax.ShapeDtypeStruct((nblocks, mb_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((nblocks, mb_pad), jnp.int32)],
+        interpret=interpret,
+    )(stacked, scal, gpad)
+    probs = _normalize(e.reshape(-1), part, nblocks, blk)[:k]
+    _, pos = jax.lax.top_k(cval.reshape(-1), m)
+    selected = cidx.reshape(-1)[pos]
+    return selected, probs, scores.reshape(-1)[:k]
+
+
+def segmented_score_probs(
+    loss_prev, loss_prev2, label_js, part_count, last_selected,
+    update_sqnorm, has_loss, has_momentum,
+    *, sizes, round_idx, tau, cfg: HeteRoScoreConfig, seg: int,
+    staleness_override=None, interpret: bool = False,
+):
+    """Per-edge fused scoring for E block-aligned edge slices in ONE launch.
+
+    Inputs are ``(E·seg,)`` arrays laid out edge-major — edge e's members
+    occupy ``[e·seg, e·seg + sizes[e])``, the rest of each slice is padding
+    (``seg`` must be a LANE multiple). Each grid step reduces and scores one
+    edge independently, reproducing the per-edge jnp path's statistics and
+    softmax. Returns ``(probs, scores)`` in the same ``(E·seg,)`` layout
+    (padding slots hold probability 0).
+    """
+    if seg % LANE:
+        raise ValueError(f"seg must be a multiple of {LANE}, got {seg}")
+    num_edges = int(sizes.shape[0])
+    k_total = num_edges * seg
+    if loss_prev.shape[0] != k_total:
+        raise ValueError(
+            f"edge-major operands must be (E*seg,) = ({k_total},), "
+            f"got {loss_prev.shape}")
+    rows = (loss_prev, loss_prev2, label_js, part_count, last_selected,
+            update_sqnorm, has_loss, has_momentum)
+    stacked = _pack(rows, staleness_override, k_total, k_total)
+    sizes_op = jnp.zeros((num_edges, LANE), jnp.float32).at[:, 0].set(
+        jnp.asarray(sizes, jnp.float32))
+    t = jnp.asarray(round_idx, jnp.float32)
+    use_ov = 0.0 if staleness_override is None else 1.0
+    # Stat lanes start at zero — filled per-edge inside the kernel.
+    scal = _scalar_row(t, tau, use_ov, 0.0, 0.0, 0.0, 0.0, 0.0, k_total)
+
+    kernel = functools.partial(_segment_kernel, cfg=cfg, seg=seg)
     probs, scores = pl.pallas_call(
         kernel,
-        grid=(1,),
-        in_specs=[pl.BlockSpec((kpad,), lambda i: (0,))] * 8
-        + [pl.BlockSpec((2,), lambda i: (0,))],
-        out_specs=[pl.BlockSpec((kpad,), lambda i: (0,)),
-                   pl.BlockSpec((kpad,), lambda i: (0,))],
-        out_shape=[jax.ShapeDtypeStruct((kpad,), jnp.float32),
-                   jax.ShapeDtypeStruct((kpad,), jnp.float32)],
+        grid=(num_edges,),
+        in_specs=[pl.BlockSpec((NROWS, seg), lambda e: (0, e)),
+                  pl.BlockSpec((1, LANE), lambda e: (e, 0)),
+                  pl.BlockSpec((1, LANE), lambda e: (0, 0))],
+        out_specs=[pl.BlockSpec((1, seg), lambda e: (0, e)),
+                   pl.BlockSpec((1, seg), lambda e: (0, e))],
+        out_shape=[jax.ShapeDtypeStruct((1, k_total), jnp.float32),
+                   jax.ShapeDtypeStruct((1, k_total), jnp.float32)],
         interpret=interpret,
-    )(*args, scalars)
-    return probs[:k], scores[:k]
+    )(stacked, sizes_op, scal)
+    return probs.reshape(-1), scores.reshape(-1)
+
+
+def sharded_score_select(
+    loss_prev, loss_prev2, label_js, part_count, last_selected,
+    update_sqnorm, has_loss, has_momentum,
+    *, round_idx, tau, m: int, key, cfg: HeteRoScoreConfig, mesh,
+    axis: str = "clients", staleness_override=None,
+    interpret: bool = False, block: Optional[int] = None,
+):
+    """`fused_score_select` distributed over a client device axis.
+
+    The stacked state shards along clients (shard_map); each device runs the
+    two-pass kernel on its shard, then three cross-shard collectives stitch
+    the global result: pmin/pmax/psum for the pass-1 statistics, a
+    pmax/psum (m, l) merge for the softmax normalizer, and an all_gather of
+    the per-shard top-m candidates for the final cut. Returns
+    ``(selected_idx, probs, scores)`` like the single-device path.
+    """
+    from repro.sharding.rules import axis_size, shard_map_compat
+    from jax.sharding import PartitionSpec as P
+
+    ndev = max(axis_size(mesh, axis), 1)
+    k = loss_prev.shape[0]
+    local_k = -(-k // (ndev * LANE)) * LANE  # LANE-aligned per-device slice
+    kpad = local_k * ndev
+    rows = (loss_prev, loss_prev2, label_js, part_count, last_selected,
+            update_sqnorm, has_loss, has_momentum)
+    stacked = _pack(rows, staleness_override, k, kpad)
+    gumbel = jax.random.gumbel(key, (k,), jnp.float32)
+    gpad = jnp.pad(gumbel, (0, kpad - k)).reshape(1, kpad)
+
+    blk, nblocks, local_pad = _layout(local_k, block)
+    assert local_pad == local_k or local_pad > local_k
+    t = jnp.asarray(round_idx, jnp.float32)
+    use_ov = 0.0 if staleness_override is None else 1.0
+    mb_pad = -(-min(m, blk) // LANE) * LANE
+
+    def shard_body(stacked_l, gpad_l):
+        # Per-shard column offset; global validity limit is K everywhere,
+        # but a shard's padding tail must not alias the next shard's ids —
+        # clamp the limit to this shard's own extent.
+        idx = jax.lax.axis_index(axis)
+        off = (idx * local_k).astype(jnp.float32)
+        klim = jnp.minimum(off + local_k, float(k))
+        if local_pad > local_k:
+            stacked_l = jnp.pad(stacked_l, ((0, 0), (0, local_pad - local_k)))
+            gpad_l = jnp.pad(gpad_l, ((0, 0), (0, local_pad - local_k)))
+        scal0 = _scalar_row(t, tau, use_ov, 0.0, 0.0, 0.0, 1.0, off, klim)
+        st = _run_stats(stacked_l, scal0, nblocks=nblocks, block=blk,
+                        interpret=interpret)
+        lmin = jax.lax.pmin(jnp.min(st[:, ST_LMIN]), axis)
+        lmax = jax.lax.pmax(jnp.max(st[:, ST_LMAX]), axis)
+        sumsq = jax.lax.psum(jnp.sum(st[:, ST_SUMSQ]), axis)
+        nobs = jax.lax.psum(jnp.sum(st[:, ST_NOBS]), axis)
+        hmax = jax.lax.pmax(jnp.max(st[:, ST_HMAX]), axis)
+        avgsq = sumsq / jnp.maximum(nobs, 1.0)
+        hmax = jnp.maximum(hmax, 1.0)
+        scal = _scalar_row(t, tau, use_ov, lmin, lmax, avgsq, hmax, off, klim)
+
+        kernel = functools.partial(_select_kernel, cfg=cfg, block=blk,
+                                   mb_pad=mb_pad)
+        scores_l, e_l, part_l, cval_l, cidx_l = pl.pallas_call(
+            kernel,
+            grid=(nblocks,),
+            in_specs=[pl.BlockSpec((NROWS, blk), lambda i: (0, i)),
+                      pl.BlockSpec((1, LANE), lambda i: (0, 0)),
+                      pl.BlockSpec((1, blk), lambda i: (0, i))],
+            out_specs=[pl.BlockSpec((1, blk), lambda i: (0, i)),
+                       pl.BlockSpec((1, blk), lambda i: (0, i)),
+                       pl.BlockSpec((1, LANE), lambda i: (i, 0)),
+                       pl.BlockSpec((1, mb_pad), lambda i: (i, 0)),
+                       pl.BlockSpec((1, mb_pad), lambda i: (i, 0))],
+            out_shape=[jax.ShapeDtypeStruct((1, local_pad), jnp.float32),
+                       jax.ShapeDtypeStruct((1, local_pad), jnp.float32),
+                       jax.ShapeDtypeStruct((nblocks, LANE), jnp.float32),
+                       jax.ShapeDtypeStruct((nblocks, mb_pad), jnp.float32),
+                       jax.ShapeDtypeStruct((nblocks, mb_pad), jnp.int32)],
+            interpret=interpret,
+        )(stacked_l, scal, gpad_l)
+
+        # Cross-shard softmax normalizer merge (flash-attention style).
+        m_b = part_l[:, 0]
+        l_b = part_l[:, 1]
+        mglob = jax.lax.pmax(jnp.max(m_b), axis)
+        lglob = jnp.maximum(
+            jax.lax.psum(jnp.sum(l_b * jnp.exp(m_b - mglob)), axis), 1e-30)
+        scale = jnp.exp(m_b - mglob)
+        probs_l = (e_l.reshape(nblocks, blk) * scale[:, None] / lglob
+                   ).reshape(-1)[:local_k]
+        # Candidate merge: every shard sees all candidates → identical
+        # replicated top-m on every device.
+        cval_all = jax.lax.all_gather(cval_l.reshape(-1), axis).reshape(-1)
+        cidx_all = jax.lax.all_gather(cidx_l.reshape(-1), axis).reshape(-1)
+        _, pos = jax.lax.top_k(cval_all, m)
+        selected = cidx_all[pos]
+        return selected, probs_l.reshape(1, local_k), \
+            scores_l.reshape(-1)[:local_k].reshape(1, local_k)
+
+    selected, probs, scores = shard_map_compat(
+        shard_body, mesh=mesh,
+        in_specs=(P(None, axis), P(None, axis)),
+        out_specs=(P(), P(None, axis), P(None, axis)),
+    )(stacked, gpad)
+    return selected, probs.reshape(-1)[:k], scores.reshape(-1)[:k]

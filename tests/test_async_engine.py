@@ -189,17 +189,36 @@ class TestAsyncStalenessScoring:
 
     def test_async_selector_factory(self):
         sel_cfg = SelectorConfig(num_selected=2)
-        with pytest.raises(ValueError, match="heterosel_pallas"):
-            make_async_selector("heterosel_pallas", sel_cfg)
         with pytest.raises(ValueError, match="unknown selector"):
             make_async_selector("nope", sel_cfg)
         state = init_client_state(6, jnp.zeros(6, jnp.float32))
         stale = jnp.arange(6, dtype=jnp.float32)
-        for name in ("heterosel", "heterosel_mult", "oort", "random",
-                     "power_of_choice"):
+        for name in ("heterosel", "heterosel_mult", "heterosel_pallas",
+                     "oort", "random", "power_of_choice"):
             sel = make_async_selector(name, sel_cfg)
             mask, probs = sel(jax.random.PRNGKey(0), state, jnp.int32(1), stale)
             assert np.asarray(mask).sum() >= 1
+
+    def test_pallas_async_selector_matches_jnp(self):
+        """Fused async selector == jnp async selector for the same key: the
+        clock-staleness override rides the kernel's ninth stacked row, and
+        the in-kernel Gumbel-top-m draws the same noise as sample_clients."""
+        sel_cfg = SelectorConfig(num_selected=3)
+        k = 40
+        state = init_client_state(
+            k, jax.random.uniform(jax.random.PRNGKey(0), (k,)))
+        state = dataclasses.replace(
+            state,
+            loss_prev=jax.random.uniform(jax.random.PRNGKey(1), (k,),
+                                         minval=0.5, maxval=3.0),
+            has_loss=jnp.ones(k, jnp.float32))
+        stale = jax.random.uniform(jax.random.PRNGKey(2), (k,), maxval=30.0)
+        ref = make_async_selector("heterosel", sel_cfg)
+        fused = make_async_selector("heterosel_pallas", sel_cfg)
+        m1, p1 = ref(jax.random.PRNGKey(3), state, jnp.int32(5), stale)
+        m2, p2 = fused(jax.random.PRNGKey(3), state, jnp.int32(5), stale)
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+        np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=2e-6)
 
 
 class ArrivalStats(RoundHook):
@@ -252,6 +271,25 @@ class TestSyncAsyncEquivalence:
         res = FederatedSpec(model, fed, data, selector="heterosel",
                             steps_per_round=2).build().run()
         assert res.wall_clock is None and res.round_staleness is None
+
+    def test_pallas_selector_history_matches_jnp_async(self, small_setup):
+        """selector='heterosel_pallas' on the async engine: identical
+        selection history to the jnp selector (fused kernel in interpret
+        mode on CPU), with real stragglers in the mix."""
+        fed, data, model = small_setup
+        fed = dataclasses.replace(fed, rounds=3)
+        mult = np.ones(fed.num_clients)
+        mult[0] = 3.0
+        acfg = AsyncConfig(deadline=1.5, over_select_frac=0.5)
+        res_j = FederatedSpec(model, fed, data, selector="heterosel",
+                              steps_per_round=1, round_policy="async",
+                              system=mult, async_cfg=acfg).build().run()
+        res_p = FederatedSpec(model, fed, data, selector="heterosel_pallas",
+                              steps_per_round=1, round_policy="async",
+                              system=mult, async_cfg=acfg).build().run()
+        np.testing.assert_array_equal(res_p.selected_history,
+                                      res_j.selected_history)
+        np.testing.assert_allclose(res_p.accuracy, res_j.accuracy, atol=1e-6)
 
 
 class TestDeadlineAndStragglers:

@@ -216,6 +216,27 @@ class TestHierarchicalRounds:
             per_round = res.selected_history[:, part.members(e)].sum(axis=1)
             assert np.all(per_round == budgets[e])
 
+    def test_pallas_selector_history_matches_jnp(self, quickstart_setup):
+        """selector='heterosel_pallas' scores every edge in one segmented
+        kernel launch (interpret mode on CPU); per-edge Gumbel sampling
+        keeps the jnp path's keys and probability vectors, so the selection
+        history matches selector='heterosel' exactly."""
+        fed, data, model = quickstart_setup
+        hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=3,
+                                   rounds=4)
+        res_j = FederatedSpec(model, hfed, data, selector="heterosel",
+                              steps_per_round=1).build().run()
+        res_p = FederatedSpec(model, hfed, data, selector="heterosel_pallas",
+                              steps_per_round=1).build().run()
+        np.testing.assert_array_equal(res_p.selected_history,
+                                      res_j.selected_history)
+        np.testing.assert_allclose(res_p.accuracy, res_j.accuracy, atol=1e-6)
+        # per-phase round timing rides along in either mode
+        for r in (res_j, res_p):
+            assert r.select_ms.shape == (4,)
+            assert np.all(r.select_ms >= 0)
+            assert np.all(r.execute_ms > 0)
+
     def test_outer_edge_selection_budget(self, quickstart_setup):
         fed, data, model = quickstart_setup
         hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=3)

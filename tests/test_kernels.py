@@ -13,9 +13,11 @@ except ImportError:
 import jax
 import jax.numpy as jnp
 
-from repro.core.scoring import HeteRoScoreConfig
-from repro.core.selection import SelectorConfig, dynamic_temperature
-from repro.core.state import init_client_state, update_client_state
+from repro.core.scoring import HeteRoScoreConfig, compute_scores
+from repro.core.selection import (SelectorConfig, dynamic_temperature,
+                                  sample_clients)
+from repro.core.state import (init_client_state, to_bf16, to_f32,
+                              update_client_state)
 from repro.kernels import ops, ref
 
 KEY = jax.random.PRNGKey(7)
@@ -160,3 +162,202 @@ class TestScoreSelectKernel:
         p, _ = ops.heterosel_probs(s, jnp.int32(t), tau, cfg, interpret=True)
         assert bool(jnp.all(p >= 0)) and bool(jnp.all(jnp.isfinite(p)))
         assert float(jnp.sum(p)) == pytest.approx(1.0, abs=1e-5)
+
+
+class TestMultiBlockScoreSelect:
+    """PR 6 selection control plane: multi-block two-pass grid, bf16 SoA,
+    staleness override, in-kernel Gumbel-top-m, segmented + sharded paths.
+    ``block`` shrinks the VMEM block so small K exercises many blocks."""
+
+    @staticmethod
+    def _mid_state(k, seed=0, rounds=3):
+        rng = np.random.default_rng(seed)
+        s = init_client_state(k, jnp.asarray(rng.uniform(0, 0.69, k), jnp.float32))
+        for t in range(rounds):
+            s = update_client_state(
+                s, round_idx=jnp.int32(t),
+                selected_mask=jnp.asarray(rng.uniform(size=k) < 0.6),
+                observed_loss=jnp.asarray(rng.uniform(0.1, 4, k), jnp.float32),
+                observed_sqnorm=jnp.asarray(rng.uniform(0, 2, k), jnp.float32),
+            )
+        return s
+
+    @pytest.mark.parametrize("k,block", [(300, 128), (515, 128), (1000, 256)])
+    def test_multi_block_matches_reference(self, k, block):
+        """K % 128 ≠ 0 spanning several blocks ≡ the jnp paper scoring."""
+        s = self._mid_state(k, seed=k)
+        cfg = HeteRoScoreConfig()
+        t = jnp.int32(11)
+        tau = dynamic_temperature(t, SelectorConfig())
+        p, sc = ops.heterosel_probs(s, t, tau, cfg, interpret=True, block=block)
+        p_ref, sc_ref = ref.score_probs_reference(s, t, tau, cfg)
+        np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_ref), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref), atol=2e-6)
+
+    if hypothesis is None:
+        def test_multi_block_property(self):
+            pytest.importorskip("hypothesis")
+    else:
+        @hypothesis.given(
+            k=st.integers(129, 600).filter(lambda k: k % 128 != 0),
+            seed=st.integers(0, 100), t=st.integers(0, 99))
+        @hypothesis.settings(deadline=None, max_examples=8)
+        def test_multi_block_property(self, k, seed, t):
+            self._multi_block_property(k, seed, t)
+
+    def _multi_block_property(self, k, seed, t):
+        s = self._mid_state(k, seed=seed, rounds=1)
+        cfg = HeteRoScoreConfig()
+        tau = dynamic_temperature(jnp.int32(t), SelectorConfig())
+        p, _ = ops.heterosel_probs(s, jnp.int32(t), tau, cfg,
+                                   interpret=True, block=128)
+        p_ref, _ = ref.score_probs_reference(s, jnp.int32(t), tau, cfg)
+        np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref), atol=2e-6)
+        assert float(jnp.sum(p)) == pytest.approx(1.0, abs=1e-5)
+
+    def test_bf16_all_never_selected(self):
+        """The NEVER sentinel lives in the untouched int32 rows, so a fresh
+        all-never-selected federation survives the bf16 round-trip and
+        scores neutral/uniform off the compact state."""
+        k = 260
+        s = init_client_state(k, jnp.zeros(k))
+        sb = to_bf16(s)
+        assert sb.loss_prev.dtype == jnp.bfloat16
+        assert sb.last_selected.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(to_f32(sb).last_selected),
+                                      np.asarray(s.last_selected))
+        cfg = HeteRoScoreConfig()
+        t = jnp.int32(0)
+        tau = dynamic_temperature(t, SelectorConfig())
+        p, _ = ops.heterosel_probs(sb, t, tau, cfg, interpret=True, block=128)
+        p_ref, _ = ref.score_probs_reference(s, t, tau, cfg)
+        np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref), atol=2e-6)
+        np.testing.assert_allclose(np.asarray(p), np.full(k, 1.0 / k), atol=2e-6)
+
+    def test_staleness_override_parity(self):
+        """Kernel fed a clock-derived (K,) Δ ≡ jnp scoring with the same
+        override — the async-engine contract."""
+        k = 300
+        s = self._mid_state(k, seed=5)
+        rng = np.random.default_rng(9)
+        stale = jnp.asarray(rng.uniform(0, 30, k), jnp.float32)
+        cfg = HeteRoScoreConfig()
+        t = jnp.int32(21)
+        tau = dynamic_temperature(t, SelectorConfig())
+        p, sc = ops.heterosel_probs(s, t, tau, cfg, staleness_override=stale,
+                                    interpret=True, block=128)
+        sc_ref = compute_scores(s, t, cfg, additive=True,
+                                staleness_override=stale)
+        np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_ref), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(p),
+                                   np.asarray(jax.nn.softmax(sc_ref / tau)),
+                                   atol=2e-6)
+
+    def test_topm_matches_sample_clients(self):
+        """In-kernel Gumbel-top-m ≡ host-side sample_clients on one key."""
+        k, m = 515, 24
+        s = self._mid_state(k, seed=3)
+        cfg = HeteRoScoreConfig()
+        t = jnp.int32(9)
+        tau = dynamic_temperature(t, SelectorConfig(num_selected=m))
+        key = jax.random.PRNGKey(42)
+        sel, p, _ = ops.heterosel_topm(s, t, tau, m, key, cfg,
+                                       interpret=True, block=128)
+        p_ref, _ = ref.score_probs_reference(s, t, tau, cfg)
+        mask = sample_clients(key, p_ref, m)
+        np.testing.assert_array_equal(np.sort(np.asarray(sel)),
+                                      np.asarray(jnp.flatnonzero(mask)))
+        np.testing.assert_allclose(np.asarray(p), np.asarray(p_ref), atol=2e-6)
+
+    def test_segmented_matches_per_edge_reference(self):
+        """One segmented launch ≡ per-edge jnp softmax; padding lanes are
+        exactly zero (the hierarchy's inner-selection contract)."""
+        sizes = np.array([5, 128, 60], np.int32)
+        seg = 128
+        k = int(sizes.sum())
+        s = self._mid_state(k, seed=13)
+        perm = np.zeros(len(sizes) * seg, np.int64)
+        off = 0
+        for e, n in enumerate(sizes):
+            perm[e * seg:e * seg + n] = np.arange(off, off + n)
+            off += n
+        sstate = jax.tree_util.tree_map(lambda x: x[jnp.asarray(perm)], s)
+        cfg = HeteRoScoreConfig()
+        tau = dynamic_temperature(jnp.int32(6), SelectorConfig())
+        p, _ = ops.heterosel_probs_segmented(
+            sstate, jnp.asarray(sizes), round_idx=jnp.float32(6), tau=tau,
+            cfg=cfg, seg=seg, interpret=True)
+        p = np.asarray(p)
+        off = 0
+        for e, n in enumerate(sizes):
+            estate = jax.tree_util.tree_map(
+                lambda x: x[jnp.arange(off, off + n)], s)
+            p_ref, _ = ref.score_probs_reference(
+                estate, jnp.float32(6), tau, cfg)
+            np.testing.assert_allclose(p[e * seg:e * seg + n],
+                                       np.asarray(p_ref), atol=2e-6)
+            np.testing.assert_array_equal(p[e * seg + n:(e + 1) * seg], 0.0)
+            off += n
+
+    def test_sharded_topm_multi_device_subprocess(self):
+        """A real 8-way client device axis reproduces the fused cohort
+        (subprocess: XLA forced host devices, like the pod-mesh test)."""
+        import os
+        import subprocess
+        import sys
+        import textwrap
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import numpy as np
+            import jax, jax.numpy as jnp
+            from jax.sharding import Mesh
+            from repro.core.scoring import HeteRoScoreConfig
+            from repro.core.selection import SelectorConfig, dynamic_temperature
+            from repro.core.state import init_client_state, update_client_state
+            from repro.kernels import ops
+
+            k, m = 1024, 16
+            rng = np.random.default_rng(0)
+            s = init_client_state(k, jnp.asarray(rng.uniform(0, 0.69, k), jnp.float32))
+            s = update_client_state(
+                s, round_idx=jnp.int32(0),
+                selected_mask=jnp.asarray(rng.uniform(size=k) < 0.6),
+                observed_loss=jnp.asarray(rng.uniform(0.1, 4, k), jnp.float32),
+                observed_sqnorm=jnp.asarray(rng.uniform(0, 2, k), jnp.float32))
+            cfg = HeteRoScoreConfig()
+            t = jnp.int32(3)
+            tau = dynamic_temperature(t, SelectorConfig(num_selected=m))
+            key = jax.random.PRNGKey(11)
+            sel_f, p_f, _ = ops.heterosel_topm(s, t, tau, m, key, cfg,
+                                               interpret=True)
+            mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("clients",))
+            sel_s, p_s, _ = ops.heterosel_topm_sharded(
+                s, t, tau, m, key, cfg, mesh=mesh, interpret=True)
+            np.testing.assert_array_equal(np.sort(np.asarray(sel_f)),
+                                          np.sort(np.asarray(sel_s)))
+            np.testing.assert_allclose(np.asarray(p_f), np.asarray(p_s),
+                                       atol=2e-6)
+        """)
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = {**os.environ, "PYTHONPATH": os.path.join(repo, "src")}
+        out = subprocess.run([sys.executable, "-c", code], cwd=repo, env=env,
+                             capture_output=True, text=True, timeout=570)
+        assert out.returncode == 0, out.stderr
+
+    def test_sharded_equals_fused_single_device(self):
+        """shard_map wrapper on one device reproduces the fused kernel."""
+        k, m = 384, 12
+        s = self._mid_state(k, seed=8)
+        cfg = HeteRoScoreConfig()
+        t = jnp.int32(4)
+        tau = dynamic_temperature(t, SelectorConfig(num_selected=m))
+        key = jax.random.PRNGKey(5)
+        mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("clients",))
+        sel_f, p_f, _ = ops.heterosel_topm(s, t, tau, m, key, cfg,
+                                           interpret=True, block=128)
+        sel_s, p_s, _ = ops.heterosel_topm_sharded(
+            s, t, tau, m, key, cfg, mesh=mesh, interpret=True, block=128)
+        np.testing.assert_array_equal(np.sort(np.asarray(sel_f)),
+                                      np.sort(np.asarray(sel_s)))
+        np.testing.assert_allclose(np.asarray(p_f), np.asarray(p_s), atol=2e-6)

@@ -143,6 +143,21 @@ def test_power_of_choice_concentrates_vs_heterosel():
     assert run("power_of_choice") > run("heterosel") * 1.5
 
 
+def test_power_of_choice_breaks_loss_ties():
+    """Round-0 optimistic inits are all equal; without the tie jitter
+    ``lax.top_k`` would return the lowest ids every round, permanently
+    starving everyone else. Every client must get a turn."""
+    s = init_client_state(K, jnp.zeros(K))
+    cfg = SelectorConfig(num_selected=2, poc_candidates=K)
+    sel = make_selector("power_of_choice", cfg, CCFG)
+    counts = np.zeros(K)
+    for r in range(60):
+        mask, _ = sel(jax.random.PRNGKey(r), s, jnp.int32(0))
+        assert int(mask.sum()) == 2
+        counts += np.asarray(mask, float)
+    assert (counts > 0).all(), counts
+
+
 def _sample_clients_property(seed, m):
     """Property: exactly m distinct clients for any probs/m."""
     key = jax.random.PRNGKey(seed)
