@@ -10,10 +10,26 @@ Two layers:
     with a free-form ``meta.json`` (final-model export, serving).
   * ``save_federated_round`` / ``restore_federated_round`` — the full
     resumable state of a federated run: named pytrees (global params,
-    ``ClientState``, PRNG key, aggregator state) plus raw metric arrays and
-    a JSON meta carrying the host numpy RNG state. This is what
+    ``ClientState``, PRNG key, aggregator state, pending in-flight deltas)
+    plus raw metric arrays and a JSON meta carrying the host numpy RNG
+    state, the virtual clock, and engine-specific extras. This is what
     ``fed.engine.CheckpointHook`` round-trips so a run killed at round t
-    and resumed matches an uninterrupted run.
+    and resumed matches an uninterrupted run — for every
+    ``round_policy × topology`` combination (tests/test_resume_matrix.py).
+
+Federated round snapshots are **versioned and schema-checked**
+(``FORMAT_VERSION``): the JSON meta records, per tree, every keypath and
+its true dtype. ``restore_federated_round`` refuses — loudly, with
+``CheckpointMismatchError`` — snapshots whose version, tree set, keypaths
+or dtypes disagree with what the engine expects, instead of silently
+restoring a partial or miscast state. Keypaths are encoded unambiguously
+(``d:``/``s:``/``a:``/``f:`` prefixes for dict keys, sequence indices,
+dataclass attributes, and fallback flattened indices), so a dict key
+``"0"`` and a sequence index ``0`` can no longer collide. bfloat16 leaves
+round-trip **bitwise** (stored as uint16 bit patterns — ``np.savez`` cannot
+represent the ml_dtypes bfloat16 natively), which is what keeps the
+``compact_state=True`` SoA, including the int32 ``NEVER`` sentinel rows,
+exact across a kill/resume.
 """
 
 from __future__ import annotations
@@ -21,28 +37,81 @@ from __future__ import annotations
 import json
 import os
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 import jax
 
+try:  # jax guarantees ml_dtypes; guard anyway so import errors stay legible
+    import ml_dtypes
+except ImportError:  # pragma: no cover
+    ml_dtypes = None
+
+# Bump on any change to the snapshot layout. Restore refuses other versions
+# loudly: a silent cross-version partial restore is how runs diverge.
+FORMAT_VERSION = 2
+
+
+class CheckpointMismatchError(ValueError):
+    """Snapshot disagrees with what the restoring engine expects.
+
+    Raised on format-version, engine-kind, tree-set, keypath or dtype
+    mismatches. Deliberately distinct from I/O-level corruption (truncated
+    npz, unparseable JSON): a mismatch means a *misconfigured resume* —
+    ``CheckpointHook`` must never paper over it by falling back to an older
+    snapshot, while corruption legitimately falls back (loudly).
+    """
+
+
+def _path_entry(p: Any) -> str:
+    """One unambiguous keypath segment.
+
+    The old encoding str()-ed whatever attribute the entry had, so a dict
+    key ``"0"`` and a sequence index ``0`` both became ``"0"`` and could
+    alias each other's arrays. Each entry type now gets its own prefix.
+    """
+    if isinstance(p, jax.tree_util.DictKey):
+        return f"d:{p.key}"
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return f"s:{p.idx}"
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return f"a:{p.name}"
+    if isinstance(p, jax.tree_util.FlattenedIndexKey):
+        return f"f:{p.key}"
+    return f"x:{p}"
+
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
-        )
-        flat[key] = np.asarray(leaf)
+        flat["/".join(_path_entry(p) for p in path)] = np.asarray(leaf)
     return flat
+
+
+def _encode(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    """(storable array, true dtype name). bf16 → uint16 bit pattern."""
+    arr = np.asarray(arr)
+    if ml_dtypes is not None and arr.dtype == ml_dtypes.bfloat16:
+        return arr.view(np.uint16), "bfloat16"
+    return arr, arr.dtype.name
+
+
+def _decode(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    """Invert ``_encode`` — a bitwise view, never a value-converting cast."""
+    if dtype_name == "bfloat16":
+        if ml_dtypes is None:  # pragma: no cover
+            raise CheckpointMismatchError(
+                "snapshot holds bfloat16 leaves but ml_dtypes is unavailable")
+        return arr.view(ml_dtypes.bfloat16)
+    return arr
 
 
 def save_checkpoint(path: str, params: Any, *, step: int = 0,
                     extra: Optional[Dict[str, Any]] = None) -> str:
     os.makedirs(path, exist_ok=True)
     fname = os.path.join(path, f"ckpt_{step:08d}.npz")
-    np.savez(fname, **_flatten(params))
+    np.savez(fname, **{k: _encode(v)[0] for k, v in _flatten(params).items()})
     meta = {"step": step, **(extra or {})}
     with open(os.path.join(path, f"meta_{step:08d}.json"), "w") as f:
         json.dump(meta, f)
@@ -66,69 +135,151 @@ def save_federated_round(path: str, *, round_idx: int,
                          trees: Dict[str, Any],
                          arrays: Dict[str, np.ndarray],
                          meta: Dict[str, Any]) -> str:
-    """Write one resumable federated-round snapshot.
+    """Write one versioned, schema-checked federated-round snapshot.
 
     ``trees`` are pytrees restored structure-driven (a ``like`` template is
     required at restore); ``arrays`` are raw numpy arrays returned as-is
     (metric series whose length depends on the round). ``meta`` must be
     JSON-serializable — the numpy ``bit_generator.state`` dict qualifies.
+    The JSON sidecar records ``FORMAT_VERSION`` plus the full schema (every
+    tree's keypaths and true dtypes, every array's dtype); ``restore``
+    verifies all of it before touching the engine.
     """
     os.makedirs(path, exist_ok=True)
     flat: Dict[str, np.ndarray] = {}
+    schema_trees: Dict[str, Dict[str, str]] = {}
     for name, tree in trees.items():
+        schema_trees[name] = {}
         for key, leaf in _flatten(tree).items():
-            flat[f"tree:{name}/{key}"] = leaf
+            stored, dtype_name = _encode(leaf)
+            flat[f"tree:{name}/{key}"] = stored
+            schema_trees[name][key] = dtype_name
+    schema_arrays: Dict[str, str] = {}
     for name, arr in arrays.items():
-        flat[f"array:{name}"] = np.asarray(arr)
+        stored, dtype_name = _encode(np.asarray(arr))
+        flat[f"array:{name}"] = stored
+        schema_arrays[name] = dtype_name
     fname = os.path.join(path, f"fedround_{round_idx:08d}.npz")
     np.savez(fname, **flat)
+    payload = {
+        "format_version": FORMAT_VERSION,
+        "round": round_idx,
+        "schema": {"trees": schema_trees, "arrays": schema_arrays},
+        **meta,
+    }
     with open(os.path.join(path, f"fedround_{round_idx:08d}.json"), "w") as f:
-        json.dump({"round": round_idx, **meta}, f)
+        json.dump(payload, f)
     return fname
 
 
-def latest_federated_round(path: str) -> Optional[int]:
+def list_federated_rounds(path: str) -> List[int]:
+    """All snapshot rounds under ``path``, ascending (empty if none)."""
     if not os.path.isdir(path):
-        return None
-    rounds = [int(m.group(1)) for f in os.listdir(path)
-              if (m := re.match(r"fedround_(\d+)\.npz$", f))]
-    return max(rounds) if rounds else None
+        return []
+    return sorted(int(m.group(1)) for f in os.listdir(path)
+                  if (m := re.match(r"fedround_(\d+)\.npz$", f)))
+
+
+def latest_federated_round(path: str) -> Optional[int]:
+    rounds = list_federated_rounds(path)
+    return rounds[-1] if rounds else None
+
+
+def prune_federated_rounds(path: str, keep_last: int) -> List[int]:
+    """Delete all but the newest ``keep_last`` snapshots; returns removed."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be ≥ 1, got {keep_last}")
+    stale = list_federated_rounds(path)[:-keep_last]
+    for r in stale:
+        for suffix in ("npz", "json"):
+            fp = os.path.join(path, f"fedround_{r:08d}.{suffix}")
+            if os.path.exists(fp):
+                os.remove(fp)
+    return stale
+
+
+def read_federated_meta(path: str, round_idx: Optional[int] = None
+                        ) -> Dict[str, Any]:
+    """Load (and version-check) a snapshot's JSON meta without its arrays.
+
+    Engines read this first to learn how many in-flight deltas the snapshot
+    carries (the restore templates depend on it) before the structure-driven
+    ``restore_federated_round`` pass.
+    """
+    round_idx = latest_federated_round(path) if round_idx is None else round_idx
+    if round_idx is None:
+        raise FileNotFoundError(f"no federated checkpoint under {path}")
+    with open(os.path.join(path, f"fedround_{round_idx:08d}.json")) as f:
+        meta = json.load(f)
+    version = meta.get("format_version")
+    if version != FORMAT_VERSION:
+        raise CheckpointMismatchError(
+            f"federated checkpoint {path} round {round_idx} has format "
+            f"version {version!r}; this build reads only version "
+            f"{FORMAT_VERSION} — re-run from scratch or restore with a "
+            "matching build (no silent cross-version restore)")
+    return meta
 
 
 def restore_federated_round(
     path: str, *, likes: Dict[str, Any], round_idx: Optional[int] = None,
     optional: Tuple[str, ...] = (),
 ) -> Tuple[Dict[str, Any], Dict[str, np.ndarray], Dict[str, Any]]:
-    """Restore a ``save_federated_round`` snapshot.
+    """Restore a ``save_federated_round`` snapshot, schema-checked.
 
     ``likes`` maps tree name → template pytree (same keypaths and dtypes as
     at save time). Names listed in ``optional`` are skipped silently when
     absent from the snapshot (e.g. aggregator state of a stateless
-    aggregator). Returns ``(trees, arrays, meta)``.
+    aggregator). Everything else is verified against the recorded schema
+    before any leaf is materialized: unknown snapshot trees, missing or
+    extra keypaths, and dtype disagreements all raise
+    ``CheckpointMismatchError`` — a partial or miscast restore is worse
+    than no restore. Returns ``(trees, arrays, meta)``.
     """
     round_idx = latest_federated_round(path) if round_idx is None else round_idx
-    if round_idx is None:
-        raise FileNotFoundError(f"no federated checkpoint under {path}")
+    meta = read_federated_meta(path, round_idx)
+    schema = meta["schema"]
+    unknown = sorted(set(schema["trees"]) - set(likes))
+    if unknown:
+        raise CheckpointMismatchError(
+            f"snapshot round {round_idx} carries trees the restoring engine "
+            f"did not ask for: {unknown} — engine/snapshot mismatch "
+            "(was the checkpoint written by a different run configuration?)")
+
     data = np.load(os.path.join(path, f"fedround_{round_idx:08d}.npz"))
     trees: Dict[str, Any] = {}
     for name, like in likes.items():
-        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
-        keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
-                for kp, _ in leaves_with_path]
-        files = [f"tree:{name}/{k}" for k in keys]
-        missing = [f for f in files if f not in data.files]
-        if missing:
+        if name not in schema["trees"]:
             if name in optional:
                 continue
-            raise KeyError(f"checkpoint missing keys for tree {name!r}: "
-                           f"{missing[:5]} ...")
-        restored = [jax.numpy.asarray(data[f], dtype=leaf.dtype)
-                    for f, (_, leaf) in zip(files, leaves_with_path)]
+            raise CheckpointMismatchError(
+                f"snapshot round {round_idx} is missing required tree "
+                f"{name!r} (has: {sorted(schema['trees'])})")
+        recorded = schema["trees"][name]
+        leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+        want = {"/".join(_path_entry(p) for p in kp): leaf
+                for kp, leaf in leaves_with_path}
+        missing = sorted(set(recorded) - set(want))
+        extra = sorted(set(want) - set(recorded))
+        if missing or extra:
+            raise CheckpointMismatchError(
+                f"tree {name!r} keypaths disagree with snapshot round "
+                f"{round_idx}: missing from template {missing[:5]}, "
+                f"unknown to snapshot {extra[:5]}")
+        restored = []
+        for kp, leaf in leaves_with_path:
+            key = "/".join(_path_entry(p) for p in kp)
+            if recorded[key] != np.dtype(leaf.dtype).name:
+                raise CheckpointMismatchError(
+                    f"tree {name!r} leaf {key!r}: snapshot dtype "
+                    f"{recorded[key]} != template dtype "
+                    f"{np.dtype(leaf.dtype).name} (e.g. a compact_state="
+                    "True/False flip between save and resume)")
+            restored.append(jax.numpy.asarray(
+                _decode(data[f"tree:{name}/{key}"], recorded[key])))
         trees[name] = jax.tree_util.tree_unflatten(treedef, restored)
-    arrays = {f[len("array:"):]: data[f] for f in data.files
-              if f.startswith("array:")}
-    with open(os.path.join(path, f"fedround_{round_idx:08d}.json")) as f:
-        meta = json.load(f)
+    arrays = {name: _decode(data[f"array:{name}"], dtype_name)
+              for name, dtype_name in schema["arrays"].items()}
     return trees, arrays, meta
 
 
@@ -146,8 +297,10 @@ def restore_checkpoint(path: str, like: Any, step: Optional[int] = None
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
     restored = []
     for path_k, leaf in leaves_with_path:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        key = "/".join(_path_entry(p) for p in path_k)
         arr = data[key]
+        if ml_dtypes is not None and np.dtype(leaf.dtype) == ml_dtypes.bfloat16:
+            arr = _decode(arr, "bfloat16")
         restored.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     with open(os.path.join(path, f"meta_{step:08d}.json")) as f:
         meta = json.load(f)

@@ -119,9 +119,26 @@ def to_bf16(state: ClientState) -> ClientState:
     sentinel and staleness Δ survive untouched. The fused kernel accepts
     the bf16 rows directly (per-block f32 upcast in-register); the jnp
     scoring path upcasts at its boundary via :func:`to_f32`.
+
+    Checkpointing is layout-exact: the federated round snapshot
+    (``repro.ckpt``) records each field's true dtype in its schema and
+    stores bf16 rows as raw bit patterns, so a ``compact_state=True`` run
+    resumes with this mixed bf16/int32 layout bitwise — including ``NEVER``
+    rows in ``last_selected`` — and a resume that flips ``compact_state``
+    fails loudly on the dtype schema instead of silently upcasting.
     """
     return jax.tree_util.tree_map(
         lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x, state)
+
+
+def field_dtypes(state: ClientState) -> dict[str, str]:
+    """Field → dtype-name map of the SoA layout (f32 vs bf16 compact).
+
+    The resume tests assert this is identical across a kill/restore — the
+    checkpoint layer must hand back exactly the layout it was given, never
+    a cast."""
+    return {f.name: jnp.asarray(getattr(state, f.name)).dtype.name
+            for f in dataclasses.fields(state)}
 
 
 def to_f32(state: ClientState) -> ClientState:

@@ -37,10 +37,12 @@ from repro.fed.engine import (
     FederatedEngine,
     FederatedSpec,
     FLResult,
+    KillAtRound,
     MetricsHook,
     RoundContext,
     RoundHook,
     SequentialExecutor,
+    SimulatedPreemption,
     VerboseHook,
     WeightedFedAvg,
     register_aggregator,
@@ -70,6 +72,8 @@ __all__ = [
     "VerboseHook",
     "AdaptiveMuHook",
     "CheckpointHook",
+    "KillAtRound",
+    "SimulatedPreemption",
     "EXECUTORS",
     "AGGREGATORS",
     "HOOKS",

@@ -272,8 +272,9 @@ class AsyncFederatedEngine(FederatedEngine):
     ``'async'`` (``FedConfig.round_policy`` or the spec field). Differences
     from the synchronous skeleton are confined to *when* updates reach the
     server; scoring, executors, hooks and metrics all reuse the sync
-    machinery. Checkpoint/resume is not supported yet: the clock and the
-    in-flight buffer are not part of the persisted round state.
+    machinery — including ``CheckpointHook``: the virtual clock, pending
+    in-flight updates and staleness counters checkpoint via the engine's
+    ``extra_state`` protocol, so a killed async run resumes bitwise.
     """
 
     def __init__(self, spec: FederatedSpec):
@@ -471,16 +472,74 @@ class AsyncFederatedEngine(FederatedEngine):
         extras.setdefault("round_staleness", np.asarray(self.round_staleness))
         return super()._result(extras)
 
-    # -- checkpointing: not yet -------------------------------------------
+    # -- checkpoint / resume ----------------------------------------------
+    #
+    # The base engine owns the snapshot (params, ClientState, RNG streams,
+    # aggregator state, metric series); the async regime contributes its
+    # time axis through the extra_state protocol: the virtual clock with
+    # every pending in-flight completion (each a PendingUpdate whose delta
+    # pytree is persisted as its own schema-checked tree keyed by the
+    # event's seq), the in-flight / last-contact vectors the staleness
+    # override reads, the realized-duration stats behind _ref_time, and the
+    # wall_clock / round_staleness series. A run killed at round t resumes
+    # bitwise — same selector draws, same arrival order, same wall-clock
+    # trace (tests/test_resume_matrix.py).
 
-    def save(self, path: str) -> str:
-        raise NotImplementedError(
-            "async-engine checkpointing is not implemented: the virtual "
-            "clock and the in-flight update buffer are not part of the "
-            "persisted round state; run without CheckpointHook")
+    @property
+    def snapshot_kind(self) -> str:
+        return "async/flat"
 
-    def restore(self, path: str, round_idx: Optional[int] = None) -> int:
-        raise NotImplementedError(
-            "async-engine checkpointing is not implemented: the virtual "
-            "clock and the in-flight update buffer are not part of the "
-            "persisted round state; run without CheckpointHook")
+    def extra_state(self):
+        trees = {}
+        pending_meta = {}
+        for ev in self.clock.pending():
+            trees[f"pending/{ev.seq}"] = ev.payload.delta
+            pending_meta[str(ev.seq)] = {
+                "loss": ev.payload.loss, "sqnorm": ev.payload.sqnorm,
+                "weight": ev.payload.weight,
+            }
+        arrays = {
+            "in_flight": self._in_flight,
+            # Holds -inf for never-contacted clients: must travel as an
+            # array shard, not JSON (which cannot encode infinities).
+            "last_contact": np.asarray(self._last_contact, np.float64),
+            "wall_clock": np.asarray(self.wall_clock, np.float64),
+            "round_staleness": np.asarray(self.round_staleness, np.float64),
+        }
+        meta = {
+            "clock": self.clock.state_dict(),
+            "pending": pending_meta,
+            "dur_sum": self._dur_sum,
+            "dur_n": self._dur_n,
+            "stragglers_carried": self.stragglers_carried,
+            "updates_dropped": self.updates_dropped,
+        }
+        return trees, arrays, meta
+
+    def extra_likes(self, meta):
+        # Pending deltas share the params structure but are always f32
+        # (params_delta_f32), whatever dtype the model params use.
+        delta_like = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), self.params)
+        return {f"pending/{ev['seq']}": delta_like
+                for ev in meta["extra"]["clock"]["events"]}
+
+    def load_extra_state(self, trees, arrays, meta):
+        extra = meta["extra"]
+        payloads = {
+            int(seq): PendingUpdate(
+                delta=trees[f"pending/{seq}"], loss=info["loss"],
+                sqnorm=info["sqnorm"], weight=info["weight"])
+            for seq, info in extra["pending"].items()
+        }
+        self.clock = VirtualClock()
+        self.clock.load_state_dict(extra["clock"], payloads)
+        self._in_flight = np.asarray(arrays["in_flight"], bool).copy()
+        self._last_contact = np.asarray(arrays["last_contact"],
+                                        np.float64).copy()
+        self._dur_sum = float(extra["dur_sum"])
+        self._dur_n = int(extra["dur_n"])
+        self.stragglers_carried = int(extra["stragglers_carried"])
+        self.updates_dropped = int(extra["updates_dropped"])
+        self.wall_clock = [float(x) for x in arrays["wall_clock"]]
+        self.round_staleness = [float(x) for x in arrays["round_staleness"]]

@@ -29,8 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import itertools
-from typing import Any, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -62,7 +61,7 @@ class VirtualClock:
     def __init__(self, start: float = 0.0):
         self.now = float(start)
         self._heap: List[Completion] = []
-        self._seq = itertools.count()
+        self._next_seq = 0  # plain int (not itertools.count): checkpointable
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -72,9 +71,10 @@ class VirtualClock:
         """Enqueue a completion ``delay`` time units from now (delay ≥ 0)."""
         if delay < 0:
             raise ValueError(f"completion delay must be ≥ 0, got {delay}")
-        ev = Completion(time=self.now + float(delay), seq=next(self._seq),
+        ev = Completion(time=self.now + float(delay), seq=self._next_seq,
                         client=int(client), dispatch_round=int(dispatch_round),
                         payload=payload)
+        self._next_seq += 1
         heapq.heappush(self._heap, ev)
         return ev
 
@@ -116,6 +116,50 @@ class VirtualClock:
         if out:
             self.advance_to(out[-1].time)
         return out
+
+    def pending(self) -> List[Completion]:
+        """The pending events in ``(time, seq)`` order, without popping."""
+        return sorted(self._heap)
+
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-serializable clock state, **excluding payloads**.
+
+        Payloads are pytrees (pending client/edge deltas) that belong in the
+        checkpoint's array shards, not its JSON meta — the engine persists
+        them separately keyed by each event's ``seq``, which is unique for
+        the lifetime of the clock and therefore a stable join key across the
+        save/restore boundary (``load_state_dict``).
+        """
+        return {
+            "now": self.now,
+            "next_seq": self._next_seq,
+            "events": [{"time": ev.time, "seq": ev.seq, "client": ev.client,
+                        "dispatch_round": ev.dispatch_round}
+                       for ev in sorted(self._heap)],
+        }
+
+    def load_state_dict(self, state: Dict[str, Any],
+                        payloads: Dict[int, Any]) -> None:
+        """Rebuild the clock from ``state_dict`` + per-seq payloads.
+
+        ``payloads`` maps event ``seq`` → the payload the engine persisted
+        for that event; every pending event must have one (missing payloads
+        mean a partial snapshot — refuse loudly rather than resume with a
+        silently dropped in-flight update).
+        """
+        missing = [e["seq"] for e in state["events"]
+                   if e["seq"] not in payloads]
+        if missing:
+            raise ValueError(
+                f"clock restore: no payload for pending events {missing}")
+        self.now = float(state["now"])
+        self._next_seq = int(state["next_seq"])
+        self._heap = [Completion(time=float(e["time"]), seq=int(e["seq"]),
+                                 client=int(e["client"]),
+                                 dispatch_round=int(e["dispatch_round"]),
+                                 payload=payloads[e["seq"]])
+                      for e in state["events"]]
+        heapq.heapify(self._heap)
 
 
 @dataclasses.dataclass

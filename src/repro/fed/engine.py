@@ -738,31 +738,111 @@ class CheckpointHook(RoundHook):
     """Mid-run checkpoint/resume for federated runs (``repro.ckpt``).
 
     Every ``every`` rounds, round-trips the full resumable state: global
-    params, ``ClientState``, the jax PRNG key, the host numpy RNG state,
-    aggregator state (momentum velocity), sibling-hook state
-    (``RoundHook.state_dict`` — e.g. the adaptive-μ controller's EMAs), and
-    the metric series — so a run killed at round t and resumed reproduces
-    the uninterrupted run exactly (tests/test_engine_api.py).
-    ``resume=True`` restores the latest checkpoint at run start when one
-    exists; the resumed spec must rebuild the same hook list (hook state is
-    keyed by list position).
+    params, ``ClientState`` (f32 or bf16 ``compact_state`` layout — bitwise,
+    including the int32 ``NEVER`` sentinel), the jax PRNG key, the host
+    numpy RNG state, aggregator state (momentum velocity, FedBuff buffer),
+    sibling-hook state (``RoundHook.state_dict`` — e.g. the adaptive-μ
+    controller's EMAs), the metric series, and whatever the running engine
+    declares via its ``extra_state`` protocol — the async virtual clock with
+    its pending in-flight updates and staleness counters, the hierarchical
+    cloud-upload series and in-flight edge cohorts. A run killed at round t
+    and resumed therefore reproduces the uninterrupted run bitwise for every
+    ``round_policy × topology`` combination (tests/test_resume_matrix.py).
+
+    Snapshots are versioned and schema-checked; a resume against the wrong
+    engine kind, format version or state dtype fails loudly
+    (``CheckpointMismatchError``) instead of partially restoring.
+    ``resume=True`` restores the newest *readable* snapshot at run start:
+    if the latest is corrupt (truncated write at the preemption instant),
+    the hook warns and falls back to the next older one — but a schema or
+    engine mismatch is a misconfiguration and always re-raises.
+    ``keep_last=N`` garbage-collects all but the newest N snapshots after
+    each save. The resumed spec must rebuild the same hook list (hook state
+    is keyed by list position), with this hook *before* any
+    ``KillAtRound``-style hook so the save lands ahead of the kill.
 
     Known limitation: top-k error-feedback residuals are not checkpointed;
     a resumed compressed run re-accumulates them from zero."""
 
-    def __init__(self, path: str, every: int = 1, resume: bool = True):
+    def __init__(self, path: str, every: int = 1, resume: bool = True,
+                 keep_last: Optional[int] = None):
+        if keep_last is not None and keep_last < 1:
+            raise ValueError(f"keep_last must be ≥ 1, got {keep_last}")
         self.path = path
         self.every = max(every, 1)
         self.resume = resume
+        self.keep_last = keep_last
 
     def on_run_start(self, ctx: RoundContext) -> None:
-        if self.resume and repro_ckpt.latest_federated_round(self.path) is not None:
-            ctx.engine.restore(self.path)
+        if not self.resume:
+            return
+        rounds = repro_ckpt.list_federated_rounds(self.path)
+        if not rounds:
+            return
+        errors = []
+        for r in reversed(rounds):
+            try:
+                ctx.engine.restore(self.path, round_idx=r)
+                if errors:
+                    warnings.warn(
+                        f"CheckpointHook: resumed from round {r} after "
+                        f"skipping unreadable snapshot(s): {errors}",
+                        RuntimeWarning, stacklevel=2)
+                return
+            except repro_ckpt.CheckpointMismatchError:
+                # Wrong engine/version/schema is a misconfigured resume,
+                # not disk corruption — never fall back past it.
+                raise
+            except Exception as e:  # truncated npz / unparseable json
+                errors.append(f"round {r}: {type(e).__name__}: {e}")
+        raise RuntimeError(
+            f"CheckpointHook: no readable snapshot under {self.path!r} "
+            f"out of {len(rounds)} candidate(s): {errors}")
 
     def on_round_end(self, ctx: RoundContext) -> None:
         t = ctx.round_idx
         if (t + 1) % self.every == 0 or t == ctx.fed.rounds - 1:
             ctx.engine.save(self.path)
+            if self.keep_last is not None:
+                repro_ckpt.prune_federated_rounds(self.path, self.keep_last)
+
+
+class SimulatedPreemption(RuntimeError):
+    """Raised by ``KillAtRound`` to simulate a mid-run kill (tests/CI)."""
+
+
+class KillAtRound(RoundHook):
+    """Crash-injection hook: die after round ``t`` like a preempted worker.
+
+    ``phase="round_end"`` (default) raises from ``on_round_end`` after round
+    ``t`` — list it *after* ``CheckpointHook`` so the snapshot for round
+    ``t`` lands first, exactly like a preemption between rounds.
+    ``phase="round_start"`` raises at the *start* of round ``t + 1``
+    instead: the mid-phase variant, killing after the round-``t`` snapshot
+    but once the next round's hooks have begun firing. The resume test
+    matrix (tests/test_resume_matrix.py) builds on this instead of ad-hoc
+    truncated-round loops."""
+
+    PHASES = ("round_end", "round_start")
+
+    def __init__(self, t: int, phase: str = "round_end"):
+        if phase not in self.PHASES:
+            raise ValueError(f"phase must be one of {self.PHASES}, got {phase!r}")
+        self.t = int(t)
+        self.phase = phase
+
+    def _die(self, where: str) -> None:
+        raise SimulatedPreemption(
+            f"simulated preemption at {where} (KillAtRound(t={self.t}, "
+            f"phase={self.phase!r}))")
+
+    def on_round_start(self, ctx: RoundContext) -> None:
+        if self.phase == "round_start" and ctx.round_idx == self.t + 1:
+            self._die(f"start of round {ctx.round_idx}")
+
+    def on_round_end(self, ctx: RoundContext) -> None:
+        if self.phase == "round_end" and ctx.round_idx == self.t:
+            self._die(f"end of round {ctx.round_idx}")
 
 
 @register_hook("metrics")
@@ -1121,6 +1201,41 @@ class FederatedEngine:
         )
 
     # -- checkpoint / resume ----------------------------------------------
+    #
+    # The base engine owns the snapshot layout (versioned + schema-checked,
+    # see repro.ckpt); subclasses contribute their per-round extras through
+    # the four-method ``extra_state`` protocol below instead of
+    # reimplementing save/restore. The snapshot records ``snapshot_kind`` so
+    # a resume against the wrong engine fails loudly before any leaf loads.
+
+    @property
+    def snapshot_kind(self) -> str:
+        """Engine identity stamped into (and verified against) snapshots."""
+        return "sync/flat"
+
+    def extra_state(self) -> Tuple[Dict[str, Any], Dict[str, np.ndarray],
+                                   Dict[str, Any]]:
+        """Subclass hook: extra ``(trees, arrays, meta)`` to persist.
+
+        Tree/array names share one namespace with the base snapshot
+        (``params``, ``client_state``, ``rng_key``, ``aggregator_state``;
+        ``metric``, ``train_loss``, ``selected_history``) — pick new ones.
+        The meta dict is stored under the snapshot's ``"extra"`` key and
+        handed back verbatim to ``extra_likes`` / ``load_extra_state``."""
+        return {}, {}, {}
+
+    def extra_likes(self, meta: Dict[str, Any]) -> Dict[str, Any]:
+        """Subclass hook: restore templates for ``extra_state`` trees.
+
+        Receives the snapshot's full meta (``meta["extra"]`` included)
+        *before* arrays load — the template set may depend on it (e.g. one
+        delta tree per in-flight completion, keyed by event seq)."""
+        return {}
+
+    def load_extra_state(self, trees: Dict[str, Any],
+                         arrays: Dict[str, np.ndarray],
+                         meta: Dict[str, Any]) -> None:
+        """Subclass hook: re-install restored extras into engine fields."""
 
     def save(self, path: str) -> str:
         """Write the full resumable state after the current round."""
@@ -1135,16 +1250,25 @@ class FederatedEngine:
             "train_loss": np.asarray(self.metrics.train_loss, np.float64),
             "selected_history": np.stack(self.metrics.selected).astype(np.uint8),
         }
+        extra_trees, extra_arrays, extra_meta = self.extra_state()
+        clash = (set(trees) | {"aggregator_state"}) & set(extra_trees)
+        clash |= set(arrays) & set(extra_arrays)
+        if clash:
+            raise ValueError(f"extra_state name collision: {sorted(clash)}")
+        trees.update(extra_trees)
+        arrays.update(extra_arrays)
         hook_states = {str(i): s for i, h in enumerate(self.hooks)
                        if (s := h.state_dict()) is not None}
         meta = {
             "round": t,
+            "engine": self.snapshot_kind,
             "mu": self.mu,
             "wire_bytes": self.wire_total,
             "raw_bytes": self.raw_total,
             "metric_name": self.metric_name,
             "np_rng_state": self.rng.bit_generator.state,
             "hook_states": hook_states,
+            "extra": extra_meta,
         }
         return repro_ckpt.save_federated_round(
             path, round_idx=t, trees=trees, arrays=arrays, meta=meta)
@@ -1154,7 +1278,18 @@ class FederatedEngine:
 
         Must be called after ``run()`` initialized params/state/key (the
         restore is structure-driven) — ``CheckpointHook`` does this from
-        ``on_run_start``."""
+        ``on_run_start``. Verifies the snapshot was written by the same
+        engine kind before anything loads; all schema/dtype checks raise
+        ``repro.ckpt.CheckpointMismatchError`` rather than partially
+        restoring."""
+        head = repro_ckpt.read_federated_meta(path, round_idx)
+        written_by = head.get("engine")
+        if written_by != self.snapshot_kind:
+            raise repro_ckpt.CheckpointMismatchError(
+                f"snapshot round {head['round']} under {path!r} was written "
+                f"by engine {written_by!r}; this engine is "
+                f"{self.snapshot_kind!r} — resume with a matching "
+                "round_policy/topology configuration")
         agg_like = self.aggregator.get_state()
         if agg_like is None:
             # Momentum velocity shares the params structure but is always
@@ -1164,8 +1299,9 @@ class FederatedEngine:
                 lambda x: x.astype(jnp.float32), self.params)
         likes = {"params": self.params, "client_state": self.state,
                  "rng_key": self.key, "aggregator_state": agg_like}
+        likes.update(self.extra_likes(head))
         trees, arrays, meta = repro_ckpt.restore_federated_round(
-            path, likes=likes, round_idx=round_idx,
+            path, likes=likes, round_idx=int(head["round"]),
             optional=("aggregator_state",))
         self.params = trees["params"]
         self.state = trees["client_state"]
@@ -1190,6 +1326,7 @@ class FederatedEngine:
             i = int(i_str)
             if i < len(self.hooks):
                 self.hooks[i].load_state_dict(s)
+        self.load_extra_state(trees, arrays, meta)
         self.start_round = int(meta["round"])
         self._rounds_done = self.start_round
         return self.start_round

@@ -60,10 +60,14 @@ host-dispatched on the same per-edge keys and (|edge|,) probability vectors
 as the jnp path, so the selection history matches ``selector='heterosel'``
 (pinned by tests/test_hierarchy.py).
 
-Known limitations (loud errors): no ``availability`` masks (edge-local
-selection does not thread them yet), no ``CheckpointHook`` (the per-round
-cloud-upload series, and in async mode the clock and in-flight edge buffer,
-are not part of the persisted round state).
+``CheckpointHook`` composes with both policies: the cloud-upload series —
+and in async mode the virtual clock with its in-flight edge cohorts — are
+part of the versioned round snapshot via the engine's ``extra_state``
+protocol, so a killed hierarchical run resumes bitwise
+(tests/test_resume_matrix.py).
+
+Known limitation (loud error): no ``availability`` masks (edge-local
+selection does not thread them yet).
 """
 
 from __future__ import annotations
@@ -87,6 +91,7 @@ from repro.core.selection import (
     sample_clients,
 )
 from repro.core.state import pool_client_state, update_client_state
+from repro import ckpt as repro_ckpt
 from repro.fed import server as fed_server
 from repro.fed.async_engine import (
     AsyncConfig,
@@ -564,18 +569,89 @@ class HierarchicalEngine(FederatedEngine):
                               np.asarray(self.round_staleness))
         return super()._result(extras)
 
-    # -- checkpointing: not yet -------------------------------------------
+    # -- checkpoint / resume ----------------------------------------------
+    #
+    # The edge partition itself is deterministic from the spec (label_js +
+    # edge_count + partition mode/seed), so it is rebuilt, not persisted —
+    # only its shape is stamped into the snapshot as a sanity check. What
+    # does persist via the extra_state protocol: the cloud-upload series,
+    # and in async mode the virtual clock with each in-flight EdgeCohort
+    # (delta pytree as its own schema-checked tree; cohort ids / losses /
+    # sqnorms as per-seq arrays) plus the in-flight edge mask and the
+    # wall-clock series. The snapshot kind embeds the round policy, so an
+    # async/hierarchical snapshot never restores into a sync engine.
 
-    def save(self, path: str) -> str:
-        raise NotImplementedError(
-            "hierarchical-engine checkpointing is not implemented: the "
-            "per-round cloud-upload series (and in async mode the virtual "
-            "clock and in-flight edge buffer) are not part of the persisted "
-            "round state; run without CheckpointHook")
+    @property
+    def snapshot_kind(self) -> str:
+        return f"{self.policy}/hierarchical"
 
-    def restore(self, path: str, round_idx: Optional[int] = None) -> int:
-        raise NotImplementedError(
-            "hierarchical-engine checkpointing is not implemented: the "
-            "per-round cloud-upload series (and in async mode the virtual "
-            "clock and in-flight edge buffer) are not part of the persisted "
-            "round state; run without CheckpointHook")
+    def extra_state(self):
+        trees: Dict[str, Any] = {}
+        arrays: Dict[str, np.ndarray] = {
+            "cloud_uploads": np.asarray(self.cloud_uploads, np.int64),
+        }
+        meta: Dict[str, Any] = {"edge_count": self.edge_count}
+        if self.policy == "async":
+            pending_meta: Dict[str, Any] = {}
+            for ev in self.clock.pending():
+                c = ev.payload
+                trees[f"pending/{ev.seq}"] = c.delta
+                arrays[f"pending_sel/{ev.seq}"] = np.asarray(c.selected,
+                                                             np.int64)
+                arrays[f"pending_loss/{ev.seq}"] = np.asarray(c.losses,
+                                                              np.float32)
+                arrays[f"pending_sqnorm/{ev.seq}"] = np.asarray(c.sqnorms,
+                                                                np.float32)
+                pending_meta[str(ev.seq)] = {"edge": c.edge,
+                                             "weight": c.weight}
+            arrays["edge_in_flight"] = self._edge_in_flight
+            arrays["wall_clock"] = np.asarray(self.wall_clock, np.float64)
+            arrays["round_staleness"] = np.asarray(self.round_staleness,
+                                                   np.float64)
+            meta.update(clock=self.clock.state_dict(), pending=pending_meta,
+                        stragglers_carried=self.stragglers_carried,
+                        updates_dropped=self.updates_dropped)
+        return trees, arrays, meta
+
+    def extra_likes(self, meta):
+        extra = meta["extra"]
+        if extra.get("edge_count") != self.edge_count:
+            raise repro_ckpt.CheckpointMismatchError(
+                f"snapshot was written with edge_count="
+                f"{extra.get('edge_count')}, this engine partitions into "
+                f"{self.edge_count} edges — resume with the same "
+                "FedConfig.edge_count")
+        if self.policy != "async":
+            return {}
+        # In-flight edge deltas share the params structure but are always
+        # f32 (params_delta_f32), whatever dtype the model params use.
+        delta_like = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), self.params)
+        return {f"pending/{ev['seq']}": delta_like
+                for ev in extra["clock"]["events"]}
+
+    def load_extra_state(self, trees, arrays, meta):
+        extra = meta["extra"]
+        self.cloud_uploads = [int(x) for x in arrays["cloud_uploads"]]
+        if self.policy != "async":
+            return
+        payloads = {
+            int(seq): EdgeCohort(
+                edge=int(info["edge"]),
+                selected=np.asarray(arrays[f"pending_sel/{seq}"], np.int64),
+                losses=np.asarray(arrays[f"pending_loss/{seq}"], np.float32),
+                sqnorms=np.asarray(arrays[f"pending_sqnorm/{seq}"],
+                                   np.float32),
+                weight=float(info["weight"]),
+                avg_params=None,
+                delta=trees[f"pending/{seq}"])
+            for seq, info in extra["pending"].items()
+        }
+        self.clock = VirtualClock()
+        self.clock.load_state_dict(extra["clock"], payloads)
+        self._edge_in_flight = np.asarray(arrays["edge_in_flight"],
+                                          bool).copy()
+        self.wall_clock = [float(x) for x in arrays["wall_clock"]]
+        self.round_staleness = [float(x) for x in arrays["round_staleness"]]
+        self.stragglers_carried = int(extra["stragglers_carried"])
+        self.updates_dropped = int(extra["updates_dropped"])

@@ -57,6 +57,7 @@ def run_federated(
     system: Optional[Any] = None,            # SystemProfile | (K,) multipliers
     topology: Optional[str] = None,          # None ⇒ fed.topology
     hier_cfg: Optional[Any] = None,          # fed.hierarchy.HierarchyConfig
+    hooks: Any = (),                         # extra RoundHooks / registry names
 ) -> FLResult:
     """Run ``fed.rounds`` federated rounds and collect paper metrics.
 
@@ -82,8 +83,12 @@ def run_federated(
     twice per round (inner per-edge budgets + outer cross-edge pooled
     scores), two-stage aggregation; partition/outer knobs in ``hier_cfg``
     (``fed.hierarchy.HierarchyConfig``; docs/hierarchy.md).
+
+    ``hooks`` appends extra ``RoundHook`` instances (or registry names) —
+    e.g. ``hooks=[CheckpointHook(dir)]`` for mid-run resume, which works
+    under every ``round_policy × topology`` combination.
     """
-    hooks = ["adaptive_mu"] if adaptive_mu else []
+    hooks = (["adaptive_mu"] if adaptive_mu else []) + list(hooks)
     spec = FederatedSpec(
         model=model,
         fed=fed,

@@ -14,8 +14,11 @@ is jitted and, when a multi-device mesh exists, sharded via sharding/rules.
 
 ``--ckpt-dir`` enables mid-run checkpoint/resume via the engine's
 ``CheckpointHook``: every ``--ckpt-every`` rounds the full resumable state
-(params, client metadata, RNG streams) is written, and a relaunch with the
-same directory resumes where the killed run stopped.
+(params, client metadata, RNG streams, plus each engine's extras — the
+async virtual clock and in-flight buffers, the hierarchical edge state) is
+written, and a relaunch with the same directory resumes where the killed
+run stopped — under every ``--round-policy`` / ``--topology`` combination.
+``--ckpt-keep N`` garbage-collects all but the newest N snapshots.
 """
 
 from __future__ import annotations
@@ -49,8 +52,12 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="use the reduced smoke variant of --arch (CPU)")
     ap.add_argument("--ckpt-dir", default=None,
-                    help="enable mid-run checkpoint/resume under this dir")
+                    help="enable mid-run checkpoint/resume under this dir "
+                         "(works with every --round-policy / --topology)")
     ap.add_argument("--ckpt-every", type=int, default=5)
+    ap.add_argument("--ckpt-keep", type=int, default=0,
+                    help="keep only the newest N round snapshots "
+                         "(0 = keep all)")
     ap.add_argument("--round-policy", default="sync", choices=["sync", "async"],
                     help="sync barrier rounds vs event-driven async rounds")
     ap.add_argument("--deadline", type=float, default=0.0,
@@ -100,15 +107,12 @@ def main() -> None:
     model = build_model(cfg)
     hooks = []
     if args.ckpt_dir:
-        if args.round_policy == "async":
-            ap.error("--ckpt-dir is not supported with --round-policy async "
-                     "(clock + in-flight buffer are not checkpointed yet)")
-        if args.topology == "hierarchical":
-            ap.error("--ckpt-dir is not supported with --topology "
-                     "hierarchical (per-round edge state is not "
-                     "checkpointed yet)")
+        # Checkpoint/resume works under every round_policy × topology
+        # combination: each engine persists its extras (virtual clock,
+        # in-flight buffers, edge state) via the extra_state protocol.
         hooks.append(CheckpointHook(args.ckpt_dir, every=args.ckpt_every,
-                                    resume=True))
+                                    resume=True,
+                                    keep_last=args.ckpt_keep or None))
     if args.system_sigma > 0 and args.round_policy != "async":
         ap.error("--system-sigma only takes effect with --round-policy async "
                  "(sync rounds have no clock)")

@@ -426,11 +426,31 @@ class TestAsyncConfigAndCompat:
             FederatedSpec(model, fed, data, round_policy="async",
                           system=np.ones(3)).build()
 
-    def test_checkpointing_not_supported(self, small_setup, tmp_path):
+    def test_checkpointing_supported(self, small_setup, tmp_path):
+        """Async runs checkpoint: the snapshot carries the engine kind, the
+        clock state and the in-flight vector (full kill/resume bitwise
+        equality is pinned by tests/test_resume_matrix.py)."""
+        from repro.ckpt import latest_federated_round, read_federated_meta
+        from repro.fed import CheckpointHook
+
         fed, data, model = small_setup
-        eng = FederatedSpec(model, fed, data, round_policy="async").build()
-        with pytest.raises(NotImplementedError, match="clock"):
-            eng.save(str(tmp_path))
+        fed = dataclasses.replace(fed, rounds=2)
+        mult = np.ones(fed.num_clients)
+        mult[0] = 5.0
+        eng = FederatedSpec(
+            model, fed, data, selector="heterosel", steps_per_round=1,
+            round_policy="async", system=mult,
+            async_cfg=AsyncConfig(deadline=1.5, over_select_frac=1.0),
+            hooks=[CheckpointHook(str(tmp_path), every=1)]).build()
+        assert eng.snapshot_kind == "async/flat"
+        eng.run()
+        assert latest_federated_round(str(tmp_path)) == fed.rounds
+        meta = read_federated_meta(str(tmp_path))
+        assert meta["engine"] == "async/flat"
+        assert meta["extra"]["clock"]["now"] > 0.0
+        # every pending clock event persisted its payload delta tree
+        pending = {str(e["seq"]) for e in meta["extra"]["clock"]["events"]}
+        assert pending == set(meta["extra"]["pending"])
 
     def test_fedconfig_one_field_switch(self, small_setup):
         """The one-config-field mode switch the issue asks for."""

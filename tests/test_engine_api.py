@@ -32,8 +32,10 @@ from repro.fed import (
     ExecutorCompatError,
     FedAvgM,
     FederatedSpec,
+    KillAtRound,
     RoundHook,
     SequentialExecutor,
+    SimulatedPreemption,
     register_executor,
     run_federated,
 )
@@ -147,24 +149,13 @@ class TestCheckpointResume:
                              steps_per_round=2,
                              hooks=["adaptive_mu"]).build().run()
 
-        class KilledRun(Exception):
-            pass
-
-        class KillAfter(RoundHook):
-            def __init__(self, n):
-                self.n = n
-
-            def on_round_end(self, ctx):
-                if ctx.round_idx + 1 >= self.n:
-                    raise KilledRun()
-
         ckdir = str(tmp_path / "amu")
-        with pytest.raises(KilledRun):
+        with pytest.raises(SimulatedPreemption):
             # checkpoint hook precedes the kill switch → round 3 is on disk
             FederatedSpec(model, fed, data, selector="heterosel",
                           steps_per_round=2,
                           hooks=["adaptive_mu", CheckpointHook(ckdir, every=1),
-                                 KillAfter(3)]).build().run()
+                                 KillAtRound(2)]).build().run()
         resumed = FederatedSpec(model, fed, data, selector="heterosel",
                                 steps_per_round=2,
                                 hooks=["adaptive_mu",

@@ -365,12 +365,21 @@ class TestLoudFailures:
         with pytest.raises(ValueError, match="aggregator"):
             FederatedSpec(model, hfed, data, aggregator="fedavgm").build()
 
-    def test_checkpoint_hook_refused(self, quickstart_setup, tmp_path):
+    def test_checkpoint_hook_supported(self, quickstart_setup, tmp_path):
+        """Hierarchical runs checkpoint: the snapshot stamps the topology in
+        its engine kind and records edge_count for the resume sanity check
+        (kill/resume bitwise equality: tests/test_resume_matrix.py)."""
+        from repro.ckpt import latest_federated_round, read_federated_meta
         from repro.fed import CheckpointHook
         fed, data, model = quickstart_setup
         hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=2,
                                    rounds=2)
         spec = FederatedSpec(model, hfed, data, steps_per_round=1,
                              hooks=[CheckpointHook(str(tmp_path), every=1)])
-        with pytest.raises(NotImplementedError, match="hierarchical"):
-            spec.build().run()
+        eng = spec.build()
+        assert eng.snapshot_kind == "sync/hierarchical"
+        eng.run()
+        assert latest_federated_round(str(tmp_path)) == hfed.rounds
+        meta = read_federated_meta(str(tmp_path))
+        assert meta["engine"] == "sync/hierarchical"
+        assert meta["extra"]["edge_count"] == 2

@@ -1,0 +1,243 @@
+"""Kill-at-round-t golden resume matrix (ISSUE 7 tentpole acceptance).
+
+Every ``round_policy × topology`` combination — {sync, async} × {flat,
+hierarchical} — with and without the bf16 ``compact_state`` SoA, is run
+three times via the ``preempt_harness`` fixture: uninterrupted, killed by a
+``SimulatedPreemption`` after round t (with a ``CheckpointHook`` saving
+first), and resumed from the checkpoint directory. The resumed run must
+reproduce the uninterrupted run **bitwise**: metrics, selection history,
+``wall_clock`` / ``round_staleness`` traces, ``cloud_uploads``, final
+params, and the state-layout dtypes.
+
+The async configurations are deliberately hostile: heterogeneous latency
+multipliers, a finite deadline, over-selection and log-normal jitter, so at
+the kill point the virtual clock genuinely holds in-flight completions
+(pending delta payloads, busy clients/edges) that the snapshot must carry.
+
+Also covered here: the mid-phase kill variant, engine-kind and edge-count
+mismatch refusal, compact_state flips refused on the dtype schema,
+``keep_last`` retention through a real engine, and the corrupt-latest
+fallback (loud, never silent).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.ckpt import CheckpointMismatchError, list_federated_rounds
+from repro.configs.base import FedConfig
+from repro.configs.registry import get_config, smoke_variant
+from repro.core.state import field_dtypes
+from repro.data import make_vision_data
+from repro.fed import (
+    AsyncConfig,
+    CheckpointHook,
+    FederatedSpec,
+    HierarchyConfig,
+    KillAtRound,
+    SimulatedPreemption,
+)
+
+ROUNDS = 4
+KILL_AT = 1  # snapshot on disk covers rounds 0..1 → resume from round 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.models import build_model
+    model = build_model(dataclasses.replace(
+        smoke_variant(get_config("resnet18-cifar10")), d_model=8))
+    fed = FedConfig(num_clients=6, participation=0.5, rounds=ROUNDS,
+                    local_epochs=1, local_batch=8, lr=0.2, mu=0.1,
+                    dirichlet_alpha=0.1, seed=0)
+    data = make_vision_data(fed, train_per_class=24, test_per_class=8,
+                            noise=0.3)
+    return fed, data, model
+
+
+def make_spec_factory(setup, policy, topology, compact):
+    """A ``make_spec(hooks)`` callable for one matrix cell."""
+    fed, data, model = setup
+    kw = dict(selector="heterosel", steps_per_round=2, compact_state=compact)
+    if topology == "hierarchical":
+        fed = dataclasses.replace(fed, topology="hierarchical", edge_count=3)
+        kw["hier_cfg"] = HierarchyConfig(edges_per_round=2)
+    if policy == "async":
+        fed = dataclasses.replace(fed, round_policy="async")
+        mult = np.asarray([1.0, 3.0, 0.5, 2.5, 1.0, 4.0])
+        kw["system"] = mult
+        kw["async_cfg"] = AsyncConfig(deadline=1.5, over_select_frac=0.5,
+                                      jitter=0.1)
+
+    def make_spec(hooks):
+        return FederatedSpec(model, fed, data, hooks=list(hooks), **kw)
+
+    return make_spec
+
+
+def assert_bitwise_resume(full, resumed, engine, *, compact):
+    assert engine.start_round == KILL_AT + 1
+    np.testing.assert_array_equal(resumed.selected_history,
+                                  full.selected_history)
+    # float series compare as exact bit patterns, not tolerances
+    np.testing.assert_array_equal(np.asarray(resumed.accuracy),
+                                  np.asarray(full.accuracy))
+    np.testing.assert_array_equal(np.asarray(resumed.train_loss),
+                                  np.asarray(full.train_loss))
+    for name in ("wall_clock", "round_staleness", "cloud_uploads"):
+        a, b = getattr(full, name), getattr(resumed, name)
+        assert (a is None) == (b is None), name
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+    for (ka, a), (kb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(full.params),
+            jax.tree_util.tree_leaves_with_path(resumed.params)):
+        assert ka == kb
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a.view(np.uint8), b.view(np.uint8),
+                                      err_msg=str(ka))
+    # the checkpoint must hand back the SoA layout it was given
+    layout = field_dtypes(engine.state)
+    assert layout["last_selected"] == "int32"
+    assert layout["loss_prev"] == ("bfloat16" if compact else "float32")
+
+
+MATRIX = [(p, t) for p in ("sync", "async") for t in ("flat", "hierarchical")]
+
+
+@pytest.mark.parametrize("policy,topology", MATRIX)
+@pytest.mark.parametrize("compact", [False, True],
+                         ids=["f32state", "compact"])
+def test_kill_at_round_t_resumes_bitwise(setup, preempt_harness, policy,
+                                         topology, compact):
+    make_spec = make_spec_factory(setup, policy, topology, compact)
+    full, resumed, engine = preempt_harness(make_spec, KILL_AT)
+    assert_bitwise_resume(full, resumed, engine, compact=compact)
+
+
+def test_async_snapshot_carries_in_flight_state(setup, preempt_harness):
+    """The hostile async profile must actually exercise the clock payload
+    path — otherwise the matrix would pass with an empty event queue."""
+    make_spec = make_spec_factory(setup, "async", "flat", False)
+    full, resumed, engine = preempt_harness(make_spec, KILL_AT)
+    meta_rounds = list_federated_rounds(engine.hooks[-1].path)
+    assert meta_rounds  # checkpoints were written
+    from repro.ckpt import read_federated_meta
+    metas = [read_federated_meta(engine.hooks[-1].path, r)
+             for r in meta_rounds]
+    assert any(m["extra"]["clock"]["events"] for m in metas), (
+        "no snapshot ever held an in-flight completion; the async matrix "
+        "config is not hostile enough to prove payload persistence")
+    assert_bitwise_resume(full, resumed, engine, compact=False)
+
+
+def test_mid_phase_kill_resumes_bitwise(setup, preempt_harness):
+    """phase='round_start' dies at the start of round t+1 — after the
+    round-t snapshot but inside the next round's hook sequence."""
+    make_spec = make_spec_factory(setup, "async", "hierarchical", False)
+    full, resumed, engine = preempt_harness(make_spec, KILL_AT,
+                                            phase="round_start")
+    assert_bitwise_resume(full, resumed, engine, compact=False)
+
+
+class TestMismatchRefusal:
+    def test_engine_kind_mismatch_is_loud(self, setup, tmp_path):
+        make_sync = make_spec_factory(setup, "sync", "flat", False)
+        ckdir = str(tmp_path / "kind")
+        with pytest.raises(SimulatedPreemption):
+            make_sync([CheckpointHook(ckdir, every=1),
+                       KillAtRound(KILL_AT)]).build().run()
+        make_async = make_spec_factory(setup, "async", "flat", False)
+        with pytest.raises(CheckpointMismatchError, match="sync/flat"):
+            make_async([CheckpointHook(ckdir, every=1)]).build().run()
+
+    def test_compact_state_flip_is_loud(self, setup, tmp_path):
+        make_compact = make_spec_factory(setup, "sync", "flat", True)
+        ckdir = str(tmp_path / "compact")
+        with pytest.raises(SimulatedPreemption):
+            make_compact([CheckpointHook(ckdir, every=1),
+                          KillAtRound(KILL_AT)]).build().run()
+        make_f32 = make_spec_factory(setup, "sync", "flat", False)
+        with pytest.raises(CheckpointMismatchError, match="dtype"):
+            make_f32([CheckpointHook(ckdir, every=1)]).build().run()
+
+    def test_edge_count_mismatch_is_loud(self, setup, tmp_path):
+        fed, data, model = setup
+        ckdir = str(tmp_path / "edges")
+        hfed = dataclasses.replace(fed, topology="hierarchical", edge_count=3)
+        with pytest.raises(SimulatedPreemption):
+            FederatedSpec(model, hfed, data, selector="heterosel",
+                          steps_per_round=2,
+                          hooks=[CheckpointHook(ckdir, every=1),
+                                 KillAtRound(KILL_AT)]).build().run()
+        hfed2 = dataclasses.replace(hfed, edge_count=2)
+        with pytest.raises(CheckpointMismatchError, match="edge_count"):
+            FederatedSpec(model, hfed2, data, selector="heterosel",
+                          steps_per_round=2,
+                          hooks=[CheckpointHook(ckdir, every=1)]
+                          ).build().run()
+
+
+class TestRetentionAndFallback:
+    def test_keep_last_retains_exactly_n_and_resumes_latest(
+            self, setup, tmp_path):
+        make_spec = make_spec_factory(setup, "sync", "flat", False)
+        full = make_spec([]).build().run()
+        ckdir = str(tmp_path / "keep")
+        with pytest.raises(SimulatedPreemption):
+            make_spec([CheckpointHook(ckdir, every=1, keep_last=2),
+                       KillAtRound(2)]).build().run()
+        assert list_federated_rounds(ckdir) == [2, 3]  # exactly N remain
+        engine = make_spec([CheckpointHook(ckdir, every=1,
+                                           keep_last=2)]).build()
+        resumed = engine.run()
+        assert engine.start_round == 3  # picked the latest snapshot
+        np.testing.assert_array_equal(resumed.selected_history,
+                                      full.selected_history)
+        np.testing.assert_array_equal(np.asarray(resumed.accuracy),
+                                      np.asarray(full.accuracy))
+
+    def test_corrupt_latest_falls_back_loudly(self, setup, tmp_path):
+        make_spec = make_spec_factory(setup, "sync", "flat", False)
+        full = make_spec([]).build().run()
+        ckdir = str(tmp_path / "corrupt")
+        with pytest.raises(SimulatedPreemption):
+            make_spec([CheckpointHook(ckdir, every=1),
+                       KillAtRound(2)]).build().run()
+        assert list_federated_rounds(ckdir) == [1, 2, 3]
+        # truncate the newest npz mid-write, like a real preemption would
+        import os
+        npz = os.path.join(ckdir, "fedround_00000003.npz")
+        with open(npz, "r+b") as f:
+            f.truncate(100)
+        engine = make_spec([CheckpointHook(ckdir, every=1)]).build()
+        with pytest.warns(RuntimeWarning, match="skipping unreadable"):
+            resumed = engine.run()
+        assert engine.start_round == 2  # fell back to the newest readable
+        np.testing.assert_array_equal(resumed.selected_history,
+                                      full.selected_history)
+        np.testing.assert_array_equal(np.asarray(resumed.accuracy),
+                                      np.asarray(full.accuracy))
+
+    def test_all_snapshots_corrupt_raises(self, setup, tmp_path):
+        make_spec = make_spec_factory(setup, "sync", "flat", False)
+        ckdir = str(tmp_path / "allbad")
+        with pytest.raises(SimulatedPreemption):
+            make_spec([CheckpointHook(ckdir, every=1),
+                       KillAtRound(1)]).build().run()
+        import os
+        for r in list_federated_rounds(ckdir):
+            with open(os.path.join(ckdir, f"fedround_{r:08d}.npz"),
+                      "r+b") as f:
+                f.truncate(10)
+        with pytest.raises(RuntimeError, match="no readable snapshot"):
+            make_spec([CheckpointHook(ckdir, every=1)]).build().run()
+
+
+def test_kill_at_round_validates_phase():
+    with pytest.raises(ValueError, match="phase"):
+        KillAtRound(2, phase="mid_gradient")
